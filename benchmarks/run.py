@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--full]``.
+
+Quick mode (default) uses miniature scenes so the whole suite finishes on a
+single CPU core; ``--full`` runs the paper-scale sweeps.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names (e.g. table6,fig17)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig14_pruning_ablation,
+        fig17_breakdown,
+        kernel_bench,
+        roofline_table,
+        table6_quality,
+        table7_splatam,
+    )
+
+    suites = {
+        "table6": table6_quality.run,
+        "table7": table7_splatam.run,
+        "fig14": fig14_pruning_ablation.run,
+        "fig17": fig17_breakdown.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline_table.run,
+    }
+    chosen = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in chosen:
+        suites[name](quick=not args.full)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Batched serving example: prefill a prompt batch, then decode with the
+ring KV cache — the path the decode_32k / long_500k dry-run cells validate
+at 256/512 chips.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b --gen 24
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "zamba2-1.2b", "--gen", "24"])
+    serve.main()

@@ -1,0 +1,78 @@
+"""HLO text analysis: collective bytes and op census.
+
+``cost_analysis()`` has no collective traffic, so we parse the optimized
+HLO (``compiled.as_text()``): every all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute instruction contributes its RESULT shape
+bytes (for all-reduce the result equals the operand; for all-gather the
+result is the gathered size — an upper bound on per-link traffic, which is
+what the roofline's collective term wants).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %ag = bf16[2,1024,512]{2,1,0} all-gather(%x), ...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {count, bytes}} over the whole module. ``-start``
+    ops are counted; their matching ``-done`` (tuple result) is skipped to
+    avoid double counting."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for m in _INSTR_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.group(1), m.group(2), m.group(3), m.group(4)
+        text = m.group(0)
+        if "-done(" in text:
+            continue
+        if tuple_body is not None:
+            total = sum(
+                _shape_bytes(dt, dm) for dt, dm in _SHAPE_RE.findall(tuple_body)
+            )
+        else:
+            total = _shape_bytes(dtype, dims)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += total
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def op_census(hlo_text: str, ops=("exponential", "fusion", "dot", "scatter",
+                                  "gather", "while")) -> Dict[str, int]:
+    """Rough op frequency (used by the R&B-buffer HLO assertions: the
+    backward of the stash path must not re-materialize the alpha exps)."""
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"\b{op}\(", hlo_text)) + len(
+            re.findall(rf"= \w+\[[0-9,]*\][^ ]* {op}", hlo_text)
+        )
+    return out

@@ -1,0 +1,285 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE
+(verified: a 10-iteration scan reports 1/10th the FLOPs of the unrolled
+version). All our models scan over layers / microbatches / kv-chunks, so
+raw cost_analysis under-counts by 10-100x and the roofline would be
+fiction. This module walks the optimized HLO text and:
+
+  * multiplies each while body by its ``known_trip_count`` backend config
+    (the CPU/TPU loop emitters record it; missing counts are flagged),
+  * recurses through fusion/call/conditional called computations,
+  * counts FLOPs from ``dot``/``convolution`` result and contraction shapes
+    (2 * numel(result) * k_contraction — the MXU work that matters for a
+    compute roofline; elementwise flops are deliberately excluded and
+    recorded as a design note),
+  * counts HBM traffic from *real data movers only*: operands + results of
+    dot/convolution, gather/scatter/dynamic-(update-)slice, concatenate,
+    sort, reduce, and collectives — trip-aware. Elementwise/convert/copy
+    chains are excluded: the CPU backend materializes every one of them
+    (bf16 widening, no fusion across regions), which would overstate TPU
+    HBM traffic by >100x; on TPU they fuse into the neighboring matmul
+    kernels. The result is a matmul-centric HBM-traffic estimate — the
+    standard napkin-roofline convention,
+  * sums collective bytes (result shapes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), trip-aware.
+
+Everything is per-device (the HLO module is the partitioned program);
+multiply by chip count for global numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# Result type is either a tuple `( ... )` — which may contain `/*index=N*/`
+# comments, so it must permit `=` — or a single `dtype[dims]{layout}`.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(.*?\)|\w+\[[0-9,]*\][^\s]*)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|body|to_apply)=(%[\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{([^}]*)\}|condition)=(%[\w.\-]+)?")
+
+
+def _shape_numel_bytes(shape_text: str) -> Tuple[int, int]:
+    """Total (numel, bytes) over possibly-tuple shape text."""
+    numel = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        total += n * _DTYPE_BYTES[dt]
+    return numel, total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_text: str
+    opcode: str
+    args_text: str
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transcendentals: float = 0.0
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v * mult
+        for k, v in other.collective_bytes_by_kind.items():
+            self.collective_bytes_by_kind[k] = self.collective_bytes_by_kind.get(k, 0) + v * mult
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self.unknown_trip_counts = 0
+        self._parse(text)
+        self._memo: Dict[str, Costs] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and ("->" in line):
+                name = hdr.group(1)
+                if not name.startswith("%"):
+                    name = "%" + name
+                cur = name
+                self.computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                self.computations[cur].append(
+                    Instr(name=m.group(1), shape_text=m.group(2),
+                          opcode=m.group(3), args_text=m.group(4))
+                )
+
+    def _shape_of(self, comp: str, name: str) -> str:
+        for ins in self.computations.get(comp, []):
+            if ins.name == name:
+                return ins.shape_text
+        return ""
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        out_numel, _ = _shape_numel_bytes(ins.shape_text)
+        ops = re.findall(r"%[\w.\-]+", ins.args_text)
+        if not ops:
+            return 0.0
+        lhs_shape = self._shape_of(comp, ops[0])
+        mm = _SHAPE_RE.search(lhs_shape)
+        if not mm:
+            return 0.0
+        dims = [int(d) for d in mm.group(2).split(",")] if mm.group(2) else []
+        cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.args_text)
+        k = 1
+        if cdims and cdims.group(1):
+            for ci in cdims.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
+        return 2.0 * out_numel * k
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        # approximate: 2 * out_numel * (kernel spatial * in_channels)
+        out_numel, _ = _shape_numel_bytes(ins.shape_text)
+        ops = re.findall(r"%[\w.\-]+", ins.args_text)
+        if len(ops) < 2:
+            return 0.0
+        _, kb = _shape_numel_bytes(self._shape_of(comp, ops[1]))
+        kn, _ = _shape_numel_bytes(self._shape_of(comp, ops[1]))
+        return 2.0 * out_numel * max(kn, 1) ** 0.5  # loose lower bound
+
+    def _instr_bytes(self, comp: str, ins: Instr) -> float:
+        _, out_b = _shape_numel_bytes(ins.shape_text)
+        total = float(out_b)
+        for op in re.findall(r"%[\w.\-]+", ins.args_text):
+            if op in self.computations:
+                continue
+            _, b = _shape_numel_bytes(self._shape_of(comp, op))
+            total += b
+        return total
+
+    def _mover_bytes(self, comp: str, ins: Instr) -> float:
+        """HBM traffic of a data-mover with slice-aware semantics: sliced
+        reads/writes touch the slice, not the full operand (a scan step
+        reads ONE layer's params from the stacked tensor, and its stash
+        write touches one slot — counting whole buffers would overstate
+        traffic by the layer count)."""
+        op = ins.opcode
+        _, out_b = _shape_numel_bytes(ins.shape_text)
+        if op in ("dynamic-slice", "gather"):
+            return 2.0 * out_b          # read slice + write result
+        if op == "dynamic-update-slice":
+            ops = re.findall(r"%[\w.\-]+", ins.args_text)
+            if len(ops) >= 2:
+                _, upd = _shape_numel_bytes(self._shape_of(comp, ops[1]))
+                return 2.0 * upd        # read update + write region
+            return out_b
+        if op == "scatter":
+            ops = re.findall(r"%[\w.\-]+", ins.args_text)
+            upd = 0
+            if len(ops) >= 3:
+                _, upd = _shape_numel_bytes(self._shape_of(comp, ops[2]))
+            return 2.0 * upd
+        return self._instr_bytes(comp, ins)
+
+    # Opcodes whose operand/result bytes count as HBM traffic.
+    _DATA_MOVERS = {
+        "dot", "convolution", "gather", "scatter", "dynamic-slice",
+        "dynamic-update-slice", "concatenate", "sort", "reduce", "pad",
+        "select-and-scatter", "reduce-window",
+    }
+
+    def comp_costs(self, comp: str) -> Costs:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Costs()
+        self._memo[comp] = total  # guards recursion
+        for ins in self.computations.get(comp, []):
+            op = ins.opcode
+            if op == "while":
+                t = _TRIP_RE.search(ins.args_text)
+                trips = int(t.group(1)) if t else 1
+                if not t:
+                    self.unknown_trip_counts += 1
+                body = _CALLS_RE.search(ins.args_text)
+                if body:
+                    total.add(self.comp_costs(body.group(1)), trips)
+            elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                        "reduce-window", "sort", "scatter", "select-and-scatter"):
+                called = _CALLS_RE.findall(ins.args_text)
+                for c in called:
+                    if c in self.computations:
+                        total.add(self.comp_costs(c))
+                if op in self._DATA_MOVERS:
+                    total.bytes += self._mover_bytes(comp, ins)
+            elif op == "conditional":
+                branches = re.findall(r"%[\w.\-]+", ins.args_text)
+                inner = Costs()
+                seen = 0
+                for c in branches:
+                    if c in self.computations:
+                        inner.add(self.comp_costs(c))
+                        seen += 1
+                if seen:  # expected cost: average of branches
+                    total.add(inner, 1.0 / seen)
+            elif op == "dot":
+                total.flops += self._dot_flops(comp, ins)
+                total.bytes += self._instr_bytes(comp, ins)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, ins)
+                total.bytes += self._instr_bytes(comp, ins)
+            elif op in _COLLECTIVE_OPS:
+                _, b = _shape_numel_bytes(ins.shape_text)
+                kind = op.replace("-start", "")
+                total.collective_bytes += b
+                total.collective_counts[kind] = total.collective_counts.get(kind, 0) + 1
+                total.collective_bytes_by_kind[kind] = (
+                    total.collective_bytes_by_kind.get(kind, 0) + b)
+                total.bytes += b
+            elif op in ("exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                        "logistic", "sine", "cosine"):
+                n, _ = _shape_numel_bytes(ins.shape_text)
+                total.transcendentals += n
+            elif op in self._DATA_MOVERS:
+                total.bytes += self._mover_bytes(comp, ins)
+        self._memo[comp] = total
+        return total
+
+    def entry_costs(self) -> Costs:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_costs(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    mod = HloModule(hlo_text)
+    c = mod.entry_costs()
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": c.collective_bytes,
+        "collective_counts": c.collective_counts,
+        "collective_bytes_by_kind": c.collective_bytes_by_kind,
+        "transcendentals": c.transcendentals,
+        "unknown_trip_counts": mod.unknown_trip_counts,
+        "num_computations": len(mod.computations),
+    }

@@ -1,0 +1,82 @@
+"""Render EXPERIMENTS.md tables from dry-run results.
+
+``python -m repro.analysis.report results/dryrun.jsonl`` prints the
+§Dry-run and §Roofline markdown tables.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = {}
+    for line in open(path):
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        rows[key] = r  # last write wins (reruns override)
+    return rows
+
+
+def fmt_seconds(x):
+    return f"{x:.2e}"
+
+
+def roofline_table(rows, mesh="16x16"):
+    out = [
+        "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) | "
+        "bottleneck | MODEL_FLOPS | HLO_FLOPs | useful ratio | roofline frac | peak GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s, m), r in sorted(rows.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {a} | {s} | {fmt_seconds(rf['t_compute_s'])} | "
+            f"{fmt_seconds(rf['t_memory_s'])} | {fmt_seconds(rf['t_collective_s'])} | "
+            f"**{rf['bottleneck']}** | {rf['model_flops']:.2e} | {rf['hlo_flops']:.2e} | "
+            f"{min(rf['flops_ratio'], 99.0):.3f} | {rf['roofline_fraction']:.4f} | "
+            f"{r['memory']['peak_gb']:.1f} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = [
+        "| arch | shape | 16x16 | 2x16x16 | peak GB/dev (pod/multi) | collectives/dev GB (pod) | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    pairs = {}
+    for (a, s, m), r in rows.items():
+        pairs.setdefault((a, s), {})[m] = r
+    for (a, s), d in sorted(pairs.items()):
+        p = d.get("16x16", {})
+        q = d.get("2x16x16", {})
+        ok_p = "✓" if p.get("ok") else "✗"
+        ok_q = "✓" if q.get("ok") else "✗"
+        out.append(
+            f"| {a} | {s} | {ok_p} | {ok_q} | "
+            f"{p.get('memory', {}).get('peak_gb', float('nan')):.1f} / "
+            f"{q.get('memory', {}).get('peak_gb', float('nan')):.1f} | "
+            f"{p.get('collective_gb_per_device', 0):.3f} | "
+            f"{p.get('compile_s', 0)} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    rows = load(path)
+    n_ok = sum(1 for r in rows.values() if r.get("ok"))
+    print(f"### Dry-run matrix — {n_ok}/{len(rows)} cells compiled\n")
+    print(dryrun_table(rows))
+    print("\n### Roofline baseline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n### Roofline (multi-pod 2x16x16, 512 chips)\n")
+    print(roofline_table(rows, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Three-term roofline from a compiled (AOT) artifact — no hardware needed.
+
+    compute    = HLO_FLOPs   / (chips * peak FLOP/s)
+    memory     = HLO_bytes   / (chips * HBM bandwidth)
+    collective = coll_bytes  / (chips * ICI link bandwidth)
+
+Hardware constants are TPU v5e-class per the brief: 197 bf16 TFLOP/s,
+819 GB/s HBM, ~50 GB/s/link ICI. ``cost_analysis`` supplies FLOPs/bytes;
+collective bytes come from the HLO parse (analysis/hlo.py). The dominant
+term is the bottleneck the §Perf loop iterates on. MODEL_FLOPS = 6*N*D
+(dense) / 6*N_active*D (MoE) exposes remat/redundancy waste via the
+MODEL_FLOPS / HLO_FLOPs ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    per_device_hbm_bytes: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound step time (the score)."""
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "flops_ratio": self.flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "per_device_hbm_gb": self.per_device_hbm_bytes / 1e9,
+        }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N*D for training, 2*N*D per generated/processed token otherwise."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens
+
+
+def from_compiled(cfg: ArchConfig, shape: ShapeSpec, mesh_name: str, chips: int,
+                  cost: dict, hlo_text: Optional[str], mem_stats: dict) -> Roofline:
+    from repro.analysis.hlo import total_collective_bytes
+
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = float(total_collective_bytes(hlo_text)) if hlo_text else 0.0
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, collective_bytes=coll,
+        model_flops=model_flops(cfg, shape),
+        per_device_hbm_bytes=float(mem_stats.get("bytes", 0.0)),
+    )
+
+
+def save_rows(rows, path: str):
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

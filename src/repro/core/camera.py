@@ -1,0 +1,68 @@
+"""Pinhole camera model for 3DGS-SLAM.
+
+A ``Camera`` carries intrinsics and a world-to-camera SE(3) pose. Poses are
+stored as 4x4 homogeneous matrices; tracking optimizes a 6-DoF tangent delta
+applied on the left (camera-frame perturbation), matching MonoGS.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import lie
+
+
+class Intrinsics(NamedTuple):
+    fx: float
+    fy: float
+    cx: float
+    cy: float
+    width: int
+    height: int
+
+    def scaled(self, factor: float) -> "Intrinsics":
+        """Return intrinsics for an image downscaled by ``factor`` (>=1)."""
+        return Intrinsics(
+            fx=self.fx / factor,
+            fy=self.fy / factor,
+            cx=self.cx / factor,
+            cy=self.cy / factor,
+            width=int(self.width // factor),
+            height=int(self.height // factor),
+        )
+
+
+class Camera(NamedTuple):
+    intrinsics: Intrinsics
+    # World-to-camera transform, (4,4) float32.
+    w2c: jnp.ndarray
+
+    @property
+    def c2w(self) -> jnp.ndarray:
+        return lie.se3_inverse(self.w2c)
+
+    def perturbed(self, xi: jnp.ndarray) -> "Camera":
+        """Left-perturb the pose by a se(3) tangent vector (6,).
+
+        ``xi`` is the optimization variable during tracking; gradients of the
+        rendering loss w.r.t. ``xi`` are the paper's pose gradients dL/dP.
+        """
+        return Camera(self.intrinsics, lie.se3_exp(xi) @ self.w2c)
+
+
+def look_at(eye: jnp.ndarray, target: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    """Build a world-to-camera matrix looking from ``eye`` toward ``target``.
+
+    Camera convention: +z forward, +x right, +y down (OpenCV).
+    """
+    fwd = target - eye
+    fwd = fwd / (jnp.linalg.norm(fwd) + 1e-9)
+    right = jnp.cross(fwd, up)
+    right = right / (jnp.linalg.norm(right) + 1e-9)
+    down = jnp.cross(fwd, right)
+    R = jnp.stack([right, down, fwd], axis=0)  # rows: camera axes in world
+    t = -R @ eye
+    top = jnp.concatenate([R, t[:, None]], axis=1)
+    return jnp.concatenate([top, jnp.array([[0.0, 0.0, 0.0, 1.0]], dtype=top.dtype)], axis=0)

@@ -1,0 +1,72 @@
+"""§4.2 Dynamic Downsampling — keyframe-distance-based resolution schedule.
+
+    keyframes:      R_n = R_0
+    non-keyframes:  R_n = min((1/16) R_0 * m^(n-k-1), (1/4) R_0)
+
+with R the *pixel count* (area), m > 1 the scaling factor (paper uses m=2),
+and k the index of the most recent keyframe.
+
+TPU adaptation: XLA needs static shapes and the rasterizer needs tile (16px)
+alignment, so the continuous area ratio is quantized to power-of-two
+per-side factors (side 4 -> 1/16 area, side 2 -> 1/4 area). Quantization
+always rounds UP in resolution (never renders fewer pixels than the paper's
+schedule asks), so accuracy can only improve; `area_ratio` preserves the
+exact formula for tests. Each factor gets its own pre-jitted render variant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class DownsampleConfig(NamedTuple):
+    m: float = 2.0          # paper's scaling factor
+    min_area: float = 1.0 / 16.0
+    max_area: float = 1.0 / 4.0
+    enabled: bool = True
+
+
+def area_ratio(frames_since_keyframe: int, cfg: DownsampleConfig = DownsampleConfig()) -> float:
+    """Exact §4.2 area ratio for non-keyframe at distance d >= 1."""
+    d = max(int(frames_since_keyframe), 1)
+    return min(cfg.min_area * cfg.m ** (d - 1), cfg.max_area)
+
+
+def side_factor(frames_since_keyframe: int, is_keyframe: bool,
+                cfg: DownsampleConfig = DownsampleConfig()) -> int:
+    """Per-side downsampling factor in {1, 2, 4} (power-of-two quantized,
+    rounded toward MORE resolution)."""
+    if is_keyframe or not cfg.enabled:
+        return 1
+    r = area_ratio(frames_since_keyframe, cfg)
+    # Largest power-of-two side factor whose area (1/f^2) still covers r:
+    if r <= 1.0 / 16.0 + 1e-12:
+        return 4
+    if r <= 1.0 / 4.0 + 1e-12:
+        return 2
+    return 1
+
+
+def downsample_image(img: jnp.ndarray, factor: int) -> jnp.ndarray:
+    """Average-pool (H, W, C?) by an integer per-side factor."""
+    if factor == 1:
+        return img
+    h, w = img.shape[0], img.shape[1]
+    assert h % factor == 0 and w % factor == 0, (h, w, factor)
+    chan = img.shape[2:]
+    x = img.reshape((h // factor, factor, w // factor, factor) + chan)
+    return x.mean(axis=(1, 3))
+
+
+def downsample_depth(depth: jnp.ndarray, factor: int) -> jnp.ndarray:
+    """Depth pooling that ignores invalid (<=0) pixels."""
+    if factor == 1:
+        return depth
+    h, w = depth.shape
+    d = depth.reshape(h // factor, factor, w // factor, factor)
+    valid = (d > 0).astype(depth.dtype)
+    s = (d * valid).sum(axis=(1, 3))
+    c = valid.sum(axis=(1, 3))
+    return jnp.where(c > 0, s / jnp.maximum(c, 1.0), 0.0)

@@ -1,0 +1,58 @@
+"""Keyframe selection policies of the three base 3DGS-SLAM algorithms.
+
+The paper retains each base algorithm's own policy (§6.1):
+  * MonoGS      — fixed frame interval;
+  * GS-SLAM     — scene change via pose distance (translation / rotation);
+  * Photo-SLAM  — photometric change vs. the last keyframe;
+  * SplaTAM     — every frame (tracking + mapping per frame; used for the
+                  GauSPU comparison, Tab. 7).
+
+Policies are host-side (Python) decisions — they gate which jitted step
+functions run, they are not traced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lie
+
+
+@dataclasses.dataclass
+class KeyframePolicy:
+    kind: str = "monogs"        # monogs | gsslam | photoslam | splatam
+    interval: int = 8           # monogs fixed interval
+    trans_thresh: float = 0.25  # gsslam: meters
+    rot_thresh: float = 0.25    # gsslam: radians
+    pho_thresh: float = 0.10    # photoslam: RMSE threshold
+
+    def is_keyframe(
+        self,
+        frame_idx: int,
+        frames_since_kf: int,
+        cur_pose: np.ndarray,
+        last_kf_pose: np.ndarray,
+        cur_rgb: np.ndarray,
+        last_kf_rgb: np.ndarray | None,
+    ) -> bool:
+        if frame_idx == 0:
+            return True
+        if self.kind == "splatam":
+            return True
+        if self.kind == "monogs":
+            return frames_since_kf >= self.interval
+        if self.kind == "gsslam":
+            rel = np.asarray(lie.se3_log(jnp.asarray(cur_pose) @ lie.se3_inverse(jnp.asarray(last_kf_pose))))
+            return (
+                float(np.linalg.norm(rel[:3])) > self.trans_thresh
+                or float(np.linalg.norm(rel[3:])) > self.rot_thresh
+            )
+        if self.kind == "photoslam":
+            if last_kf_rgb is None:
+                return True
+            err = float(np.sqrt(np.mean((cur_rgb - last_kf_rgb) ** 2)))
+            return err > self.pho_thresh
+        raise ValueError(f"unknown keyframe policy {self.kind!r}")

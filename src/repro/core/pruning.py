@@ -1,0 +1,152 @@
+"""§4.1 Adaptive Gaussian Pruning — gradient-reuse importance + mask-prune.
+
+Importance (Eq. 7):  Score_k = ||dL/dmu_k|| + lambda * ||dL/dSigma_k||
+
+The gradients are the ones tracking BP already computes to optimize the pose
+(dL/dpose factors through dL/dGaussian), so scoring is free — the paper's
+central "no identification overhead" property. Sigma is covariance; under
+our (log_scale, quat) parameterization we take ||dL/dlog_scale|| +
+||dL/dquat|| as the covariance-gradient norm (recorded hardware-adaptation:
+reparameterized covariance, same information up to the fixed Jacobian of the
+parameterization).
+
+Mask-prune protocol (verbatim from the paper):
+  * scores accumulate over the current interval of K iterations;
+  * at the interval end, the lowest-score alive Gaussians (``step_frac`` of
+    the alive set, subject to the global ``max_ratio`` cap — Fig. 14a shows
+    >=50% pruning degrades sharply, so the cap defaults to 0.5) are MASKED:
+    excluded from rendering but kept resident;
+  * at the next interval end the previously-masked set is PERMANENTLY
+    removed (alive=False) — the one-interval grace period lets the
+    tile-intersection churn ratio be computed over the unpruned set;
+  * interval adaptation: churn > 5%  -> K <- K/2  (scene moving fast,
+    re-evaluate sooner); else K <- 2K (stable, prune lazily).
+
+Fragment lists are rebuilt only at interval boundaries; within the interval
+the cached lists are reused (the paper reuses Step 1-2 + Step 2 results),
+with masked Gaussians silenced through zeroed opacity.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import GaussianField
+
+
+class PruneConfig(NamedTuple):
+    lam: float = 0.8            # lambda in Eq. 7 (paper's fixed setting)
+    k0: int = 5                 # initial pruning interval K0
+    churn_threshold: float = 0.05
+    step_frac: float = 0.10     # fraction of alive Gaussians masked per interval
+    max_ratio: float = 0.5      # global pruning cap (Fig. 14a)
+    k_min: int = 2
+    k_max: int = 40
+
+
+class PruneState(NamedTuple):
+    score: jnp.ndarray          # (N,) accumulated importance this interval
+    masked: jnp.ndarray         # (N,) bool — mask-pruned, pending removal
+    interval: jnp.ndarray       # () int32 current K
+    iters_left: jnp.ndarray     # () int32 iterations until interval end
+    prev_tile_count: jnp.ndarray  # (T,) int32 fragment counts at last boundary
+    initial_alive: jnp.ndarray  # () int32 alive count at frame start (for cap)
+    removed: jnp.ndarray        # () int32 total permanently removed
+
+
+def init_state(g: GaussianField, num_tiles: int, cfg: PruneConfig) -> PruneState:
+    n = g.capacity
+    return PruneState(
+        score=jnp.zeros((n,), jnp.float32),
+        masked=jnp.zeros((n,), bool),
+        interval=jnp.asarray(cfg.k0, jnp.int32),
+        iters_left=jnp.asarray(cfg.k0, jnp.int32),
+        prev_tile_count=jnp.zeros((num_tiles,), jnp.int32),
+        initial_alive=g.num_alive().astype(jnp.int32),
+        removed=jnp.zeros((), jnp.int32),
+    )
+
+
+def importance_scores(param_grads: dict, cfg: PruneConfig) -> jnp.ndarray:
+    """Eq. 7 from the gradients tracking BP already produced."""
+    g_mu = jnp.linalg.norm(param_grads["mu"], axis=-1)
+    g_cov = jnp.linalg.norm(param_grads["log_scale"], axis=-1) + jnp.linalg.norm(
+        param_grads["quat"], axis=-1
+    )
+    return g_mu + cfg.lam * g_cov
+
+
+def accumulate(state: PruneState, param_grads: dict, cfg: PruneConfig) -> PruneState:
+    """Per-tracking-iteration score accumulation (jit-safe)."""
+    return state._replace(
+        score=state.score + importance_scores(param_grads, cfg),
+        iters_left=state.iters_left - 1,
+    )
+
+
+def effective_opacity_mask(g: GaussianField, state: PruneState) -> jnp.ndarray:
+    """(N,) multiplier silencing mask-pruned Gaussians in cached fragment
+    lists (they stay listed until the next rebuild; zero opacity = zero
+    alpha = excluded from rendering, per the paper's mask-prune)."""
+    return (~state.masked).astype(jnp.float32)
+
+
+def interval_update(
+    state: PruneState,
+    g: GaussianField,
+    tile_count: jnp.ndarray,
+    cfg: PruneConfig,
+) -> tuple[PruneState, GaussianField, jnp.ndarray]:
+    """Interval-boundary step (jit-safe): permanently remove the previously
+    masked set, mask the next lowest-score batch, adapt K from tile churn.
+
+    Returns (new_state, new_field, did_anything).
+    """
+    # 1. Permanent removal of last interval's masked set.
+    alive = g.alive & ~state.masked
+    removed = state.removed + jnp.sum(state.masked & g.alive).astype(jnp.int32)
+
+    # 2. Select the next mask batch by accumulated score.
+    alive_count = jnp.sum(alive.astype(jnp.int32))
+    budget_left = jnp.maximum(
+        state.initial_alive
+        - removed
+        - jnp.ceil(state.initial_alive * (1.0 - cfg.max_ratio)).astype(jnp.int32),
+        0,
+    )
+    want = jnp.minimum(
+        jnp.floor(alive_count * cfg.step_frac).astype(jnp.int32), budget_left
+    )
+    score = jnp.where(alive, state.score, jnp.inf)  # only alive are candidates
+    order = jnp.argsort(score)  # ascending: least important first
+    rank = jnp.zeros((g.capacity,), jnp.int32).at[order].set(
+        jnp.arange(g.capacity, dtype=jnp.int32)
+    )
+    new_mask = alive & (rank < want)
+
+    # 3. Adapt the interval from tile-Gaussian intersection churn (§4.1).
+    denom = jnp.maximum(jnp.sum(state.prev_tile_count), 1)
+    churn = jnp.sum(jnp.abs(tile_count - state.prev_tile_count)) / denom
+    k_next = jnp.where(
+        churn > cfg.churn_threshold,
+        jnp.maximum(state.interval // 2, cfg.k_min),
+        jnp.minimum(state.interval * 2, cfg.k_max),
+    ).astype(jnp.int32)
+
+    new_state = PruneState(
+        score=jnp.zeros_like(state.score),
+        masked=new_mask,
+        interval=k_next,
+        iters_left=k_next,
+        prev_tile_count=tile_count,
+        initial_alive=state.initial_alive,
+        removed=removed,
+    )
+    return new_state, g._replace(alive=alive), want > 0
+
+
+def prune_ratio(state: PruneState) -> jnp.ndarray:
+    return state.removed / jnp.maximum(state.initial_alive, 1)

@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+The production dry-runs use DP x TP (every assigned arch fits that way on
+256 chips with FSDP), but at 1000+ nodes pipeline stages become the lever
+for cross-pod scaling where ICI links are scarce: activations cross the
+stage boundary once per microbatch instead of per-layer collective traffic.
+
+``pipeline_apply`` runs S stages over M microbatches with the classic
+(M + S - 1)-tick schedule. Stage parameters live sharded on the "stage"
+mesh axis; activations move stage-to-stage with ``lax.ppermute``. Bubble
+fraction = (S-1)/(M+S-1), reported by ``bubble_fraction`` so configs can
+budget microbatch counts.
+
+Verified in tests (8 host devices, subprocess): identical outputs to the
+sequential stack, forward and backward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+
+
+def pipeline_apply(
+    stage_fn: Callable,       # (stage_params, x) -> x
+    stage_params,             # pytree with leading dim = num_stages
+    x,                        # (num_microbatches, mb_size, ...) inputs
+    mesh: Mesh,
+    axis: str = "stage",
+):
+    """Run the pipeline. Returns outputs shaped like ``x`` (microbatched)."""
+    num_stages = mesh.devices.shape[mesh.axis_names.index(axis)]
+    num_mb = x.shape[0]
+    ticks = num_mb + num_stages - 1
+
+    pspec_params = jax.tree.map(lambda _: P(axis), stage_params)
+
+    def per_device(params_local, x_all):
+        # params_local: this stage's params (leading dim 1); x_all: all
+        # microbatches (replicated) — only stage 0 consumes them.
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        mb_shape = x_all.shape[1:]
+
+        buf = jnp.zeros((num_mb,) + mb_shape, x_all.dtype)   # collected outputs
+        carry = jnp.zeros(mb_shape, x_all.dtype)             # inbound activation
+
+        def tick(t, state):
+            carry, buf = state
+            # Stage 0 ingests microbatch t (if any); others use the carry.
+            mb_idx = jnp.clip(t, 0, num_mb - 1)
+            inject = jax.lax.dynamic_index_in_dim(x_all, mb_idx, keepdims=False)
+            inp = jnp.where(stage == 0, inject, carry)
+            out = stage_fn(params_local, inp)
+            # Last stage banks its result for microbatch t - (S-1).
+            done_idx = jnp.clip(t - (num_stages - 1), 0, num_mb - 1)
+            valid = (stage == num_stages - 1) & (t >= num_stages - 1)
+            banked = jnp.where(
+                valid,
+                out,
+                jax.lax.dynamic_index_in_dim(buf, done_idx, keepdims=False),
+            )
+            buf = jax.lax.dynamic_update_index_in_dim(buf, banked, done_idx, 0)
+            # Shift activations downstream.
+            carry = jax.lax.ppermute(
+                out, axis, [(i, i + 1) for i in range(num_stages - 1)]
+            )
+            return carry, buf
+
+        carry, buf = jax.lax.fori_loop(0, ticks, tick, (carry, buf))
+        # Only the last stage holds real outputs; psum broadcasts them
+        # (every other stage contributes zeros).
+        buf = jnp.where(stage == num_stages - 1, buf, jnp.zeros_like(buf))
+        return jax.lax.psum(buf, axis)
+
+    fn = shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(pspec_params, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return fn(stage_params, x)

@@ -1,0 +1,206 @@
+"""GSPMD sharding rules for every architecture (DP / FSDP / TP / EP / SP).
+
+Policy (per-arch knobs in ArchConfig):
+  * TP ("model" axis): attention heads, FFN hidden, vocab, MoE experts (EP).
+  * FSDP ("data" axis, cfg.fsdp=True): the *other* matmul dim of each large
+    parameter additionally sharded for storage; GSPMD all-gathers per layer
+    (what makes llama3-405b's 3.2TB of train state fit 256 chips). Params
+    replicate across the "pod" axis — FSDP within pod, pure DP across pods.
+  * DP ("pod" x "data"): batch dims of inputs and caches.
+  * SP: decode KV caches are sequence-sharded on "model" (T/16 per chip);
+    GSPMD partitions the attention reduction and inserts the partial-softmax
+    combine — the flash-decoding pattern, essential at 500k context.
+
+Every rule degrades to replication when a dim is not divisible by the axis
+size (checked here, so dry-runs never hit GSPMD padding surprises).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import axis_size, dp_axes
+
+
+def _div(mesh, axis, n) -> bool:
+    return axis is not None and n % max(axis_size(mesh, axis), 1) == 0
+
+
+def _maybe(mesh, axis, n):
+    return axis if _div(mesh, axis, n) else None
+
+
+def _dp_or_none(mesh, n, extra_model: bool = False):
+    """All DP axes if the dim divides their product, else replicate.
+    ``extra_model``: pure-DP archs also spread batch over the model axis
+    (falling back to plain DP when the batch doesn't divide that far)."""
+    dp = dp_axes(mesh)
+    candidates = []
+    if extra_model and "model" in mesh.axis_names:
+        candidates.append(dp + ("model",))
+    candidates.append(dp)
+    for axes in candidates:
+        total = 1
+        for a in axes:
+            total *= axis_size(mesh, a)
+        if axes and n % total == 0:
+            return axes
+    return None
+
+
+# Role templates for UNSTACKED parameter shapes, keyed by leaf name.
+# "tp" -> model axis, "fsdp" -> data axis (if cfg.fsdp), None -> replicate.
+_PARAM_ROLES = {
+    # name: roles per dim (matched from the right for stacked leaves)
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "xwq": ("fsdp", "tp"), "xwk": ("fsdp", "tp"), "xwv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"), "xwo": ("tp", "fsdp"),
+    "w_in": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_out": ("tp", "fsdp"), "w_down": ("tp", "fsdp"),
+    "w_gates": ("fsdp", "tp"),
+    "conv_w": (None, "tp"),
+    "dt_bias": ("tp",), "d_skip": ("tp",),
+    "r_kernels": (None, None, None, None),  # small; sharding fought GSPMD
+    "router": (None, None),
+}
+# MoE expert weights (3D unstacked): experts on model (EP).
+_MOE_ROLES = {
+    "wg": ("tp", "fsdp", None),
+    "wu": ("tp", "fsdp", None),
+    "wd": ("tp", None, "fsdp"),
+}
+# Dense MLP weights (2D unstacked).
+_DENSE_MLP_ROLES = {
+    "wg": ("fsdp", "tp"),
+    "wu": ("fsdp", "tp"),
+    "wd": ("tp", "fsdp"),
+}
+
+
+def _leaf_spec(cfg: ArchConfig, mesh, name: str, shape) -> P:
+    nd = len(shape)
+    if getattr(cfg, "pure_dp", False):
+        return P()  # replicate everything; the model axis carries batch
+    if name.startswith("ln") or name in ("final_ln",):
+        return P()
+    if name in ("wg", "wu", "wd"):
+        if nd >= 3 and cfg.family == "moe":
+            roles = _MOE_ROLES[name]
+            if not cfg.fsdp_experts:
+                roles = tuple(None if r == "fsdp" else r for r in roles)
+        else:
+            roles = _DENSE_MLP_ROLES[name]
+    elif name in _PARAM_ROLES:
+        roles = _PARAM_ROLES[name]
+    else:
+        return P()
+
+    # Stacked leaves have a leading layer dim -> prepend replication.
+    pad = nd - len(roles)
+    roles = (None,) * pad + tuple(roles)
+    axes = []
+    for role, dim in zip(roles, shape):
+        if role == "tp":
+            axes.append(_maybe(mesh, "model", dim))
+        elif role == "fsdp" and cfg.fsdp:
+            axes.append(_maybe(mesh, "data", dim))
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def param_specs(cfg: ArchConfig, params_tree: Any, mesh) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (values or structs)."""
+
+    def walk(path, leaf):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        return _leaf_spec(cfg, mesh, name or "", leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(walk, params_tree)
+
+
+def opt_specs(cfg: ArchConfig, params_tree: Any, mesh):
+    """AdamState sharding: moments mirror params, step replicated."""
+    ps = param_specs(cfg, params_tree, mesh)
+    from repro.train.optimizer import AdamState
+
+    return AdamState(step=P(), mu=ps, nu=ps)
+
+
+def batch_specs(cfg: ArchConfig, batch: Any, mesh):
+    xm = getattr(cfg, "pure_dp", False)
+
+    def walk(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "tokens":
+            return P(_dp_or_none(mesh, leaf.shape[0], xm), None)
+        if name in ("patches", "frames"):
+            return P(_dp_or_none(mesh, leaf.shape[0], xm), None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(walk, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache: Any, mesh):
+    """Decode-cache shardings: batch on DP, sequence on model (SP)."""
+
+    def walk(path, leaf):
+        name = None
+        for k in reversed(path):
+            kk = getattr(k, "key", None)
+            if isinstance(kk, str):
+                name = kk
+                break
+        shape = leaf.shape
+        nd = len(shape)
+        if name == "len":
+            return P()
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, T, KV, hd) stacked or (B, T, KV, hd) single block.
+            t_idx = nd - 3
+            b_idx = 1 if nd == 5 else 0
+            axes = [None] * nd
+            axes[b_idx] = _dp_or_none(mesh, shape[b_idx])
+            axes[t_idx] = _maybe(mesh, "model", shape[t_idx])  # SP
+            return P(*axes)
+        if name in ("state", "nstate"):
+            # (L, B, H, dk, dv): shard the first divisible inner dim on model.
+            axes = [None] * nd
+            axes[1] = _dp_or_none(mesh, shape[1])
+            for i in range(2, nd):
+                if _div(mesh, "model", shape[i]) and shape[i] > 1:
+                    axes[i] = "model"
+                    break
+            return P(*axes)
+        if name == "conv":
+            axes = [None] * nd
+            axes[1] = _dp_or_none(mesh, shape[1])
+            axes[-1] = _maybe(mesh, "model", shape[-1])
+            return P(*axes)
+        if name in ("c", "n", "m", "h"):
+            axes = [None] * nd
+            axes[0] = _dp_or_none(mesh, shape[0])
+            axes[-1] = _maybe(mesh, "model", shape[-1])
+            return P(*axes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(walk, cache)
+
+
+def to_shardings(mesh, specs: Any):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

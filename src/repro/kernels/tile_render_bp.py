@@ -1,0 +1,184 @@
+"""Pallas TPU backward rasterizer (Step 4: Rendering BP) with R&B-Buffer reuse.
+
+The paper's key observation: alpha-gradient computing dominates Rendering BP
+because the baseline *recomputes* alpha and transmittance (Eq. 5's divisions)
+that the forward pass already produced. RTGS's R&B Buffer stashes them.
+
+Here the stash is the forward kernel's ``stash`` output (raw per-fragment
+alphas, resident in VMEM per tile block). The backward **never evaluates
+exp and never divides by (1 - alpha)**: two multiply-only replays of the
+blend chain reconstruct transmittance and the suffix sums.
+
+  pass A:  total_ws = sum_k w_k s_k,  final_T          (forward replay)
+  pass B:  dL/dalpha_k = Texc_k s_k
+                     - (S_k + final_T gT) / (1 - am_k)  with
+           S_k = total_ws - prefix_k   (suffix via prefix, no back-to-front
+                                        divisions — Eq. 5 eliminated)
+
+where s_k = gC . c_k + gD d_k is the fragment's blend-weight cotangent.
+
+The per-pixel fragment gradients are reduced over the tile's 256 pixels
+*inside* the kernel (VMEM accumulators) — this is **GMU level 1**: the
+(tile, gaussian) gradient leaves the kernel already merged, shrinking the
+downstream scatter by 256x. Level 2 (tile -> Gaussian) happens outside in
+``gmu.segment_merge``.
+
+The single division by (1 - am_k) above is the analytic d/dam of the
+*downstream* product — it is mathematically required by the chain rule
+(also present in the ASIC's RBC), not an alpha recompute; am <= 0.99 keeps
+it well-conditioned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sorting import TileGrid
+from repro.kernels.ref import ALPHA_MAX, NUM_ATTRS, PIX, TERM_EPS
+from repro.kernels.tile_render import DEFAULT_CHUNK, _pixel_coords
+
+NUM_GRADS = 10  # mu_x, mu_y, conic_a, conic_b, conic_c, r, g, b, opacity, depth
+
+
+def _bwd_kernel(
+    attrs_ref, count_ref, stash_ref, g_color_ref, g_depth_ref, g_finalt_ref,
+    grads_ref,
+    *, grid_w: int, capacity: int, chunk: int,
+):
+    tile_id = pl.program_id(0)
+    px, py = _pixel_coords(tile_id, grid_w)
+    count = count_ref[0]
+
+    g_r = g_color_ref[0, 0, :][None, :]   # (1,256)
+    g_g = g_color_ref[0, 1, :][None, :]
+    g_b = g_color_ref[0, 2, :][None, :]
+    g_d = g_depth_ref[0, :][None, :]
+    g_t = g_finalt_ref[0, :][None, :]
+
+    grads_ref[...] = jnp.zeros((1, NUM_GRADS, capacity), jnp.float32)
+
+    num_chunks = capacity // chunk
+
+    # ---- pass A: total_ws and final transmittance (multiply-only replay) --
+    trans = jnp.ones((1, PIX), jnp.float32)
+    total_ws = jnp.zeros((1, PIX), jnp.float32)
+    carry = (trans, total_ws)
+    for c in range(num_chunks):
+        start = c * chunk
+        trans, total_ws = carry
+
+        active = (start < count) & (jnp.max(trans) > TERM_EPS)
+
+        def do_chunk(trans=trans, total_ws=total_ws, start=start):
+            alpha = stash_ref[0, pl.ds(start, chunk), :]  # (C,256) R&B reuse
+            for i in range(chunk):
+                k = start + i
+                a = alpha[i:i + 1, :]
+                include = (trans > TERM_EPS).astype(jnp.float32)
+                am = a * include
+                w = trans * am
+                s = (g_r * attrs_ref[0, 5, k] + g_g * attrs_ref[0, 6, k]
+                     + g_b * attrs_ref[0, 7, k] + g_d * attrs_ref[0, 9, k])
+                total_ws += w * s
+                trans = trans * (1.0 - am)
+            return trans, total_ws
+
+        carry = jax.lax.cond(active, do_chunk, lambda t=trans, w=total_ws: (t, w))
+
+    final_t, total_ws = carry
+    ft_gt = final_t * g_t  # (1,256)
+
+    # ---- pass B: fragment gradients, merged over pixels (GMU level 1) -----
+    trans = jnp.ones((1, PIX), jnp.float32)
+    prefix = jnp.zeros((1, PIX), jnp.float32)
+    carry = (trans, prefix)
+    for c in range(num_chunks):
+        start = c * chunk
+        trans, prefix = carry
+
+        active = (start < count) & (jnp.max(trans) > TERM_EPS)
+
+        def do_chunk(trans=trans, prefix=prefix, start=start):
+            alpha = stash_ref[0, pl.ds(start, chunk), :]
+            for i in range(chunk):
+                k = start + i
+                a = alpha[i:i + 1, :]
+                include = (trans > TERM_EPS).astype(jnp.float32)
+                am = a * include
+                w = trans * am
+                col_r = attrs_ref[0, 5, k]
+                col_g = attrs_ref[0, 6, k]
+                col_b = attrs_ref[0, 7, k]
+                dep = attrs_ref[0, 9, k]
+                s = g_r * col_r + g_g * col_g + g_b * col_b + g_d * dep
+                prefix += w * s
+                suffix = total_ws - prefix          # sum_{j>k} w_j s_j
+                dam = trans * s - (suffix + ft_gt) / (1.0 - am)
+                da = dam * include                  # (1,256)
+
+                # chain to conic / position / opacity (clip + cutoff masks).
+                o = attrs_ref[0, 8, k]
+                clip = (a < ALPHA_MAX).astype(jnp.float32)
+                dq = da * (-0.5 * a) * clip         # d alpha/d q = -0.5 o G
+                dx = px - attrs_ref[0, 0, k]
+                dy = py - attrs_ref[0, 1, k]
+                ca = attrs_ref[0, 2, k]
+                cb = attrs_ref[0, 3, k]
+                cc = attrs_ref[0, 4, k]
+
+                # GMU level 1: reduce each fragment gradient over 256 pixels.
+                grads_ref[0, 0, k] = jnp.sum(dq * (-2.0) * (ca * dx + cb * dy))
+                grads_ref[0, 1, k] = jnp.sum(dq * (-2.0) * (cb * dx + cc * dy))
+                grads_ref[0, 2, k] = jnp.sum(dq * dx * dx)
+                grads_ref[0, 3, k] = jnp.sum(dq * 2.0 * dx * dy)
+                grads_ref[0, 4, k] = jnp.sum(dq * dy * dy)
+                grads_ref[0, 5, k] = jnp.sum(w * g_r)
+                grads_ref[0, 6, k] = jnp.sum(w * g_g)
+                grads_ref[0, 7, k] = jnp.sum(w * g_b)
+                grads_ref[0, 8, k] = jnp.sum(da * (a / jnp.maximum(o, 1e-12)) * clip)
+                grads_ref[0, 9, k] = jnp.sum(w * g_d)
+
+                trans = trans * (1.0 - am)
+            return trans, prefix
+
+        carry = jax.lax.cond(active, do_chunk, lambda t=trans, p=prefix: (t, p))
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+def tile_render_bwd(
+    attrs: jnp.ndarray,    # (T, 12, K)
+    count: jnp.ndarray,    # (T,)
+    stash: jnp.ndarray,    # (T, K, 256) forward alphas (the R&B buffer)
+    g_color: jnp.ndarray,  # (T, 3, 256)
+    g_depth: jnp.ndarray,  # (T, 256)
+    g_finalt: jnp.ndarray,  # (T, 256)
+    grid: TileGrid,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns per-(tile, fragment) merged gradients (T, 10, K)."""
+    num_tiles, num_attrs, capacity = attrs.shape
+    assert num_attrs == NUM_ATTRS and capacity % chunk == 0
+
+    kernel = functools.partial(
+        _bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, NUM_ATTRS, capacity), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1,), lambda t: (t,)),
+            pl.BlockSpec((1, capacity, PIX), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, 3, PIX), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, PIX), lambda t: (t, 0)),
+            pl.BlockSpec((1, PIX), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, NUM_GRADS, capacity), lambda t: (t, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles, NUM_GRADS, capacity), jnp.float32),
+        interpret=interpret,
+    )(attrs, count, stash, g_color, g_depth, g_finalt)

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device count
+at first initialization, and the production meshes need 512 host devices.
+(Only this entry point sets the flag — smoke tests and benchmarks see the
+real single CPU device.)
+
+Per cell this:
+  1. builds abstract params/optimizer/batch/cache (ShapeDtypeStruct only —
+     no allocation),
+  2. jits the step with explicit in/out shardings from
+     ``distributed.sharding`` and ``.lower().compile()``s it on the
+     16x16 (single-pod) or 2x16x16 (multi-pod) mesh,
+  3. records ``memory_analysis()`` (fits-in-HBM proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the HLO collective census
+     (bytes per collective kind) for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo_counter
+from repro.analysis import roofline as roof_lib
+from repro.configs import get_arch, list_archs
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, shape_cells
+from repro.distributed import sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import Model, init_params
+from repro.train.optimizer import Adam
+
+
+def abstract_state(cfg: ArchConfig, with_opt: bool):
+    params = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if not with_opt:
+        return params, None
+    opt = Adam(lr=1e-4)
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    import jax.numpy as jnp
+
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        return specs
+    toks = s - (cfg.patch_tokens if cfg.family == "vlm" else 0)
+    specs = {"tokens": jax.ShapeDtypeStruct((b, toks), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct((b, cfg.patch_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return specs
+
+
+def build_case(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (jitted_fn, example_args) ready for .lower(*args)."""
+    import dataclasses
+
+    from repro.distributed import ctx
+    from repro.launch.mesh import axis_size, dp_axes
+
+    # pure_dp (model axis carries batch) only pays when the batch fills the
+    # whole mesh; otherwise it just idles the model axis (measured: xlstm
+    # prefill_32k rf 0.016 -> 0.007 with B=32 on 256 chips).
+    if cfg.pure_dp:
+        total = 1
+        for n in mesh.devices.shape:
+            total *= n
+        if shape.global_batch % total != 0:
+            cfg = dataclasses.replace(cfg, pure_dp=False)
+
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axis_size(mesh, a)
+    if cfg.pure_dp:  # the model axis carries batch too
+        dp = dp + ("model",)
+        dp_size *= axis_size(mesh, "model")
+    ctx.set_dp_axes(dp, dp_size)
+    ctx.set_model_axis("model", axis_size(mesh, "model"))
+    ctx.set_seq_axis("model" if cfg.seq_parallel else None,
+                     axis_size(mesh, "model"))
+
+    model = Model(cfg)
+    batch = input_specs(cfg, shape)
+    batch_sh = sharding.to_shardings(mesh, sharding.batch_specs(cfg, batch, mesh))
+
+    if shape.kind == "train":
+        from jax.sharding import PartitionSpec as P
+
+        from repro.train.trainer import make_train_step
+
+        params, opt_state = abstract_state(cfg, with_opt=True)
+        p_sh = sharding.to_shardings(mesh, sharding.param_specs(cfg, params, mesh))
+        o_sh = sharding.to_shardings(mesh, sharding.opt_specs(cfg, params, mesh))
+        opt = Adam(lr=1e-4, weight_decay=0.01, clip_norm=1.0)
+        # Microbatch count is mesh-aware: per-microbatch batch rows must stay
+        # divisible by the DP degree (256 rows / 32-way DP caps mb at 8 on
+        # the multi-pod mesh).
+        mb = max(min(cfg.microbatches, shape.global_batch // dp_size), 1)
+        # Post-split microbatch specs: (mb, B/mb, ...) with batch on DP.
+        mb_specs = None
+        if mb > 1:
+            inner = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (s.shape[0] // mb,) + s.shape[1:], s.dtype
+                ),
+                batch,
+            )
+            ispecs = sharding.batch_specs(cfg, inner, mesh)
+            mb_specs = jax.tree.map(
+                lambda s: P(None, *s), ispecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        step = make_train_step(model, opt, mb, microbatch_specs=mb_specs,
+                               grad_specs=sharding.param_specs(cfg, params, mesh))
+        fn = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(None, p_sh, o_sh),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params, opt_state, batch)
+
+    params, _ = abstract_state(cfg, with_opt=False)
+    p_sh = sharding.to_shardings(mesh, sharding.param_specs(cfg, params, mesh))
+
+    if shape.kind == "prefill":
+        fn = jax.jit(model.prefill, in_shardings=(p_sh, batch_sh))
+        return fn, (params, batch)
+
+    # decode: one new token against a seq_len-deep cache.
+    cache = jax.eval_shape(
+        lambda: model.cache_struct(shape.global_batch, shape.seq_len)
+    )
+    c_sh = sharding.to_shardings(mesh, sharding.cache_specs(cfg, cache, mesh))
+    tok_sh = sharding.to_shardings(
+        mesh, sharding.batch_specs(cfg, input_specs(cfg, shape), mesh)
+    )["tokens"]
+    fn = jax.jit(
+        model.decode_step,
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    tokens = input_specs(cfg, shape)["tokens"]
+    return fn, (params, cache, tokens)
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, save_hlo: str | None = None):
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    try:
+        with mesh:
+            fn, args = build_case(cfg, shape, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+        mem_stats = {
+            "argument_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "alias_gb": mem.alias_size_in_bytes / 1e9,
+            "peak_gb": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 1e9,
+        }
+        # Metrology: XLA's cost_analysis counts while bodies ONCE (layer /
+        # microbatch / kv-chunk scans undercount 10-100x), so FLOPs, bytes
+        # and collective bytes come from the trip-count-aware HLO analyzer.
+        # All quantities are per-device (the HLO module is the partitioned
+        # program); scale by chips for the global roofline inputs.
+        counted = hlo_counter.analyze(hlo_text)
+        cost = dict(cost)
+        roof = roof_lib.Roofline(
+            arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=chips,
+            hlo_flops=counted["flops"] * chips,
+            hlo_bytes=counted["bytes"] * chips,
+            collective_bytes=counted["collective_bytes"] * chips,
+            model_flops=roof_lib.model_flops(cfg, shape),
+            per_device_hbm_bytes=mem_stats["peak_gb"] * 1e9,
+        )
+        rec.update({
+            "ok": True,
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {k: round(v, 3) for k, v in mem_stats.items()},
+            "cost_flops_raw": float(cost.get("flops", 0.0)) * chips,
+            "counted_flops": counted["flops"] * chips,
+            "counted_bytes": counted["bytes"] * chips,
+            "counted_transcendentals": counted["transcendentals"] * chips,
+            "unknown_trip_counts": counted["unknown_trip_counts"],
+            "collectives": {k: {"count": float(v)}
+                            for k, v in counted["collective_counts"].items()},
+            "collective_gb_per_device": round(counted["collective_bytes"] / 1e9, 4),
+            "roofline": {k: (round(v, 6) if isinstance(v, float) else v)
+                         for k, v in roof.row().items()},
+        })
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo_text)
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to report
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def cells(arch_filter=None, shape_filter=None):
+    for arch in list_archs():
+        if arch_filter and arch != arch_filter:
+            continue
+        cfg = get_arch(arch)
+        for shape in shape_cells(cfg):
+            if shape_filter and shape.name != shape_filter:
+                continue
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    todo = list(cells(args.arch, args.shape))
+    assert todo, "no cells match the filter"
+
+    out_f = open(args.out, "a") if args.out else None
+    n_ok = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            rec = run_case(arch, shape, mp, save_hlo=args.save_hlo)
+            n_ok += rec["ok"]
+            line = json.dumps(rec)
+            print(("OK   " if rec["ok"] else "FAIL ")
+                  + f"{arch:26s} {shape:12s} {rec['mesh']:8s} "
+                  + (f"compile={rec.get('compile_s')}s peak={rec['memory']['peak_gb']:.2f}GB "
+                     f"bottleneck={rec['roofline']['bottleneck']}"
+                     if rec["ok"] else rec.get("error", "")))
+            if out_f:
+                out_f.write(line + "\n")
+                out_f.flush()
+    if out_f:
+        out_f.close()
+    total = len(todo) * len(meshes)
+    print(f"\n{n_ok}/{total} cells compiled")
+    raise SystemExit(0 if n_ok == total else 1)
+
+
+if __name__ == "__main__":
+    main()

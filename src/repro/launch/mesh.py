@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the "pod"
+axis is an outer data-parallel axis (batch sharded over pod x data; FSDP
+param storage shards only within a pod, gradients all-reduce across pods).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests (e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes: ('pod', 'data') when a pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, name: str) -> int:
+    names = mesh.axis_names
+    if name not in names:
+        return 1
+    return mesh.devices.shape[names.index(name)]

@@ -1,0 +1,803 @@
+"""Unified LM model covering all 10 assigned architectures.
+
+A model is a sequence of **block groups**; each group is either a scanned
+stack of identical layers (params stacked on a leading L dim — keeps HLO
+size O(1) in depth, essential for the 126-layer dry-runs) or a single block
+(zamba2's *shared* attention block, stored once and applied at several
+depths — the Zamba trick; each application has its own KV-cache slot).
+
+Group kinds:
+  dense      pre-norm GQA attention + SwiGLU  (llama3 / phi4 / danube /
+             gemma3 local:global via per-layer window array / mistral-llava)
+  moe        GQA attention + top-k expert FFN (qwen3)
+  mamba      Mamba2 SSD block (chunked GLA)
+  shared_attn  one attention+MLP block with shared params (zamba2)
+  mlstm      xLSTM matrix-memory block (chunked GLA + denominator)
+  slstm      xLSTM scalar-memory block (sequential scan)
+  enc_dense  non-causal encoder layer (whisper)
+  dec_cross  causal self-attn + cross-attn + MLP (whisper decoder)
+
+Memory discipline (what makes llama3-405b fit a v5e):
+  * two-level layer scan with inner ``jax.checkpoint``: only group-boundary
+    activations are stashed; within-group activations are rematerialized in
+    backward (the R&B-buffer trade made in the opposite direction — stash
+    when recompute is expensive (rasterizer alpha), remat when memory is
+    the binding constraint (405b activations); see DESIGN.md).
+  * gradient-accumulation microbatching in train_step (cfg.microbatches).
+  * bf16 params/grads/Adam moments (recorded in EXPERIMENTS.md).
+
+Decode caches are fixed-size rings: slot = pos % T, valid length
+min(pos+1, T). A full-length cache (T = max context) gives exact full
+attention; a window-sized ring (zamba2 at 500k) gives sliding-window
+attention with O(window) memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed import ctx
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    blockwise_attention,
+    chunked_cross_entropy,
+    cross_entropy,
+    decode_attention,
+    rmsnorm,
+    rope,
+    swiglu,
+)
+
+CONV_K = 4  # mamba depthwise conv width
+MAMBA_HD = 64
+
+
+class Group(NamedTuple):
+    kind: str
+    key: str    # params dict key (zamba2's shared block repeats one key)
+    ckey: str   # cache dict key (unique per group instance)
+    layers: int
+    meta: dict
+
+
+def plan_groups(cfg: ArchConfig) -> List[Group]:
+    f = cfg.family
+    if f in ("dense", "vlm", "moe"):
+        if cfg.local_global_ratio:
+            r = cfg.local_global_ratio
+            windows = tuple(
+                0 if (l % (r + 1)) == r else cfg.sliding_window
+                for l in range(cfg.num_layers)
+            )
+        else:
+            windows = (cfg.sliding_window,) * cfg.num_layers
+        kind = "moe" if f == "moe" else "dense"
+        return [Group(kind, "layers", "layers", cfg.num_layers, {"windows": windows})]
+    if f == "hybrid":
+        groups: List[Group] = []
+        remaining, i = cfg.num_layers, 0
+        while remaining > 0:
+            g = min(cfg.attn_every, remaining)
+            groups.append(Group("mamba", f"mamba{i}", f"mamba{i}", g, {}))
+            remaining -= g
+            if remaining > 0:
+                groups.append(Group("shared_attn", "shared", f"shared{i}", 1,
+                                    {"window": cfg.sliding_window}))
+            i += 1
+        return groups
+    if f == "ssm":  # xlstm
+        groups, rep, l = [], 0, 0
+        while l < cfg.num_layers:
+            run = min(cfg.slstm_every - 1, cfg.num_layers - l)
+            if run > 0:
+                groups.append(Group("mlstm", f"mlstm{rep}", f"mlstm{rep}", run, {}))
+                l += run
+            if l < cfg.num_layers:
+                groups.append(Group("slstm", f"slstm{rep}", f"slstm{rep}", 1, {}))
+                l += 1
+            rep += 1
+        return groups
+    if f == "encdec":
+        return [
+            Group("enc_dense", "encoder", "encoder", cfg.encoder_layers, {}),
+            Group("dec_cross", "decoder", "decoder", cfg.num_layers, {}),
+        ]
+    raise ValueError(f"unknown family {f}")
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+
+def _dense_layer_init(key, cfg: ArchConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 12)
+    sc = d ** -0.5
+    dt = jnp.bfloat16
+    p = {
+        "ln1": jnp.ones((d,), dt),
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * sc).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * sc).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * sc).astype(dt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+        "ln2": jnp.ones((d,), dt),
+    }
+    if cross:
+        p.update({
+            "lnx": jnp.ones((d,), dt),
+            "xwq": (jax.random.normal(ks[7], (d, h * hd)) * sc).astype(dt),
+            "xwk": (jax.random.normal(ks[8], (d, kv * hd)) * sc).astype(dt),
+            "xwv": (jax.random.normal(ks[9], (d, kv * hd)) * sc).astype(dt),
+            "xwo": (jax.random.normal(ks[10], (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+        })
+    if cfg.family == "moe":
+        e, ff = cfg.num_experts, cfg.d_ff
+        p.update({
+            "router": (jax.random.normal(ks[4], (d, e)) * sc).astype(jnp.float32),
+            "wg": (jax.random.normal(ks[5], (e, d, ff)) * sc).astype(dt),
+            "wu": (jax.random.normal(ks[6], (e, d, ff)) * sc).astype(dt),
+            "wd": (jax.random.normal(ks[11], (e, ff, d)) * ff ** -0.5).astype(dt),
+        })
+    else:
+        ff = cfg.d_ff if cfg.d_ff else 4 * d
+        p.update({
+            "wg": (jax.random.normal(ks[4], (d, ff)) * sc).astype(dt),
+            "wu": (jax.random.normal(ks[5], (d, ff)) * sc).astype(dt),
+            "wd": (jax.random.normal(ks[6], (ff, d)) * ff ** -0.5).astype(dt),
+        })
+    return p
+
+
+def _mamba_layer_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    d_in = 2 * d
+    ds = cfg.ssm_state
+    h = d_in // MAMBA_HD
+    ks = jax.random.split(key, 3)
+    sc = d ** -0.5
+    dt = jnp.bfloat16
+    conv_ch = d_in + 2 * ds
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_in": (jax.random.normal(ks[0], (d, 2 * d_in + 2 * ds + h)) * sc).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_ch)) * 0.5).astype(dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (d_in, d)) * d_in ** -0.5).astype(dt),
+    }
+
+
+def _mlstm_layer_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    dt = jnp.bfloat16
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_up": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5).astype(dt),
+        "wq": (jax.random.normal(ks[1], (di, di)) * di ** -0.5).astype(dt),
+        "wk": (jax.random.normal(ks[2], (di, di)) * di ** -0.5).astype(dt),
+        "wv": (jax.random.normal(ks[3], (di, di)) * di ** -0.5).astype(dt),
+        "w_gates": (jax.random.normal(ks[4], (di, 2 * h)) * di ** -0.5).astype(dt),
+        "w_down": (jax.random.normal(ks[5], (di, d)) * di ** -0.5).astype(dt),
+    }
+
+
+def _slstm_layer_init(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 3)
+    dt = jnp.bfloat16
+    return {
+        "ln": jnp.ones((d,), dt),
+        "w_gates": (jax.random.normal(ks[0], (d, h * hd * 4)) * d ** -0.5).astype(dt),
+        "r_kernels": (jax.random.normal(ks[1], (4, h, hd, hd)) * hd ** -0.5).astype(dt),
+        "w_out": (jax.random.normal(ks[2], (d, d)) * d ** -0.5).astype(dt),
+    }
+
+
+_LAYER_INIT = {
+    "dense": _dense_layer_init,
+    "moe": _dense_layer_init,
+    "enc_dense": _dense_layer_init,
+    "shared_attn": _dense_layer_init,
+    "mamba": _mamba_layer_init,
+    "mlstm": _mlstm_layer_init,
+    "slstm": _slstm_layer_init,
+}
+
+
+def init_params(cfg: ArchConfig, key) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    keys = jax.random.split(key, 64)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * d ** -0.5).astype(jnp.bfloat16),
+        "final_ln": jnp.ones((d,), jnp.bfloat16),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(keys[1], (d, v)) * d ** -0.5
+        ).astype(jnp.bfloat16)
+
+    ki = 2
+    for g in plan_groups(cfg):
+        if g.key in params:
+            continue  # shared block already created
+        if g.kind == "dec_cross":
+            fn = lambda k: _dense_layer_init(k, cfg, cross=True)
+        else:
+            base = _LAYER_INIT[g.kind]
+            fn = lambda k: base(k, cfg)
+        layer_keys = jax.random.split(keys[ki % 64], max(g.layers, 2))[: g.layers]
+        ki += 1
+        params[g.key] = jax.vmap(fn)(layer_keys) if g.layers > 1 else fn(layer_keys[0])
+    return params
+
+
+# --------------------------------------------------------------------------
+# Block applies (sequence mode)
+# --------------------------------------------------------------------------
+
+def _attn_seq(x, p, cfg: ArchConfig, window, kv_chunk, causal=True):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(b, s, h, hd)
+    k = (xn @ p["wk"]).reshape(b, s, kv, hd)
+    v = (xn @ p["wv"]).reshape(b, s, kv, hd)
+    pos = jnp.arange(s)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    o = blockwise_attention(q, k, v, causal=causal, window=window, kv_chunk=kv_chunk)
+    return x + o.reshape(b, s, h * hd) @ p["wo"], (k, v)
+
+
+def _mlp_seq(x, p, cfg: ArchConfig):
+    xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    return x + swiglu(xn, p["wg"], p["wu"], p["wd"])
+
+
+def _moe_seq(x, p, cfg: ArchConfig):
+    xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    out, aux = moe_lib.moe_ffn(xn, p["router"], p["wg"], p["wu"], p["wd"],
+                               cfg.top_k, cfg.moe_capacity_factor)
+    return x + out, aux
+
+
+def _mamba_split(proj, d_in, ds):
+    return jnp.split(proj, [d_in, 2 * d_in, 2 * d_in + ds, 2 * d_in + 2 * ds], axis=-1)
+
+
+def _mamba_seq(x, p, cfg: ArchConfig):
+    b, s, d = x.shape
+    d_in, ds = 2 * d, cfg.ssm_state
+    h = d_in // MAMBA_HD
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    z, xv, bb, cc, dt = _mamba_split(xn @ p["w_in"], d_in, ds)
+    conv_in = jnp.concatenate([xv, bb, cc], axis=-1)
+    conv_out = jax.nn.silu(ssm_lib.causal_conv1d(conv_in, p["conv_w"]))
+    xv, bb, cc = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+    log_decay = -jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    q = jnp.broadcast_to(cc[:, :, None, :], (b, s, h, ds))
+    k = jnp.broadcast_to(bb[:, :, None, :], (b, s, h, ds))
+    vv = xv.reshape(b, s, h, MAMBA_HD)
+    y, state = ssm_lib.chunked_gla(q, k, vv, log_decay, chunk=min(256, s))
+    y = y + p["d_skip"][None, None, :, None] * vv.astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype) * jax.nn.silu(z)
+    conv_tail = conv_in[:, -(CONV_K - 1):, :]
+    return x + y @ p["w_out"], (state, conv_tail)
+
+
+def _mlstm_seq(x, p, cfg: ArchConfig):
+    b, s, d = x.shape
+    di = 2 * d
+    h = cfg.num_heads
+    hd = di // h
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xm, z = jnp.split(xn @ p["w_up"], 2, axis=-1)
+    q = (xm @ p["wq"]).reshape(b, s, h, hd) * hd ** -0.5
+    k = (xm @ p["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (xm @ p["wv"]).reshape(b, s, h, hd)
+    gates = (xm @ p["w_gates"]).astype(jnp.float32).reshape(b, s, h, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 0])
+    i_gate = jax.nn.sigmoid(gates[..., 1])  # bounded input gate (chunk-stable)
+    k = k * i_gate[..., None].astype(k.dtype)
+    # Fused numerator+denominator: augment v with a ones column so ONE GLA
+    # pass produces both C_t q (first hd cols) and n_t q (last col) —
+    # halves the chunk-scan work vs. the two-pass formulation (§Perf).
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    out, st = ssm_lib.chunked_gla(q, k, v_aug, log_f, chunk=min(256, s))
+    num, den = out[..., :hd], out[..., hd:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y.reshape(b, s, di).astype(x.dtype) * jax.nn.silu(z)
+    return x + y @ p["w_down"], st
+
+
+def _slstm_seq(x, p, cfg: ArchConfig):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    gates = (xn @ p["w_gates"]).reshape(b, s, h, hd, 4)
+    y, state = ssm_lib.slstm_scan(gates, p["r_kernels"])
+    y = y.reshape(b, s, d).astype(x.dtype)
+    return x + y @ p["w_out"], state
+
+
+def _cross_seq(x, p, memory, cfg: ArchConfig, kv_chunk):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    xn = rmsnorm(x, p["lnx"], cfg.norm_eps)
+    q = (xn @ p["xwq"]).reshape(b, s, h, hd)
+    k = (memory @ p["xwk"]).reshape(b, memory.shape[1], kv, hd)
+    v = (memory @ p["xwv"]).reshape(b, memory.shape[1], kv, hd)
+    o = blockwise_attention(q, k, v, causal=False, window=0, kv_chunk=kv_chunk)
+    return x + o.reshape(b, s, h * hd) @ p["xwo"], (k, v)
+
+
+# --------------------------------------------------------------------------
+# Stacked-group scan with two-level remat
+# --------------------------------------------------------------------------
+
+def _remat_group_size(n: int) -> int:
+    """Largest divisor of n <= ~1.5*sqrt(n) (sqrt-memory double remat)."""
+    target = max(int(math.sqrt(n) * 1.5), 1)
+    best = 1
+    for g in range(1, n + 1):
+        if n % g == 0 and g <= target:
+            best = g
+    return best
+
+
+def scan_group(x, stacked, body, layers: int, remat, extra_xs=None):
+    """Scan ``body(x, layer_params, extra) -> (x, y)`` over stacked layers.
+
+    remat: "none" | "group" (single-level group checkpoint) | "block"
+    (double remat: per-layer checkpoint nested in a per-group checkpoint)
+    — activation stash is O(L/g + g) layer boundaries instead of O(L).
+    """
+    use_remat = bool(remat) and remat != "none"
+    if extra_xs is None:
+        extra_xs = jnp.zeros((layers,), jnp.int32)
+
+    if layers == 1:
+        return body(x, stacked, jax.tree.map(lambda a: a[0], extra_xs))
+
+    def step(carry, inputs):
+        p, e = inputs
+        carry = ctx.constrain_batch(carry)
+        return body(carry, p, e)
+
+    xs = (stacked, extra_xs)
+    g = _remat_group_size(layers) if use_remat else layers
+    n_outer = layers // g
+
+    if not use_remat or n_outer <= 1:
+        fn = jax.checkpoint(step, prevent_cse=False) if use_remat else step
+        return jax.lax.scan(fn, x, xs)
+
+    reshaped = jax.tree.map(lambda a: a.reshape((n_outer, g) + a.shape[1:]), xs)
+    # Double remat (default): per-layer checkpoint nested in a per-group
+    # checkpoint. Backward stash = group boundaries (L/g) + layer boundaries
+    # within the group being recomputed (g) + ONE layer's internals — the
+    # sqrt-memory schedule that fits llama3-405b activations.
+    # "group" mode: single-level (group checkpoint only) — one fewer
+    # recompute pass per layer (TP all-reduces and FSDP all-gathers shrink
+    # ~25%) at the cost of g layers' internals resident during group bwd.
+    layer_step = step if remat == "group" else jax.checkpoint(step, prevent_cse=False)
+
+    @jax.checkpoint
+    def inner_scan(c, gxs):
+        return jax.lax.scan(layer_step, c, gxs)
+
+    x, ys = jax.lax.scan(inner_scan, x, reshaped)
+    ys = jax.tree.map(
+        lambda a: a.reshape((layers,) + a.shape[2:]) if a is not None else None, ys
+    )
+    return x, ys
+
+
+# --------------------------------------------------------------------------
+# Decode building blocks
+# --------------------------------------------------------------------------
+
+def _attn_step(x, p, k_cache, v_cache, pos, window, cfg: ArchConfig):
+    """One-token attention against a ring cache. x (B,1,d)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    t = k_cache.shape[1]
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(b, 1, h, hd)
+    k = (xn @ p["wk"]).reshape(b, 1, kv, hd)
+    v = (xn @ p["wv"]).reshape(b, 1, kv, hd)
+    posv = jnp.full((b, 1), pos)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    slot = pos % t
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+    eff_len = jnp.minimum(pos + 1, t)
+    # Linear (full-length) caches apply the sliding-window mask; ring caches
+    # (t <= window, e.g. zamba2 at 500k) ARE the window — no mask needed.
+    o = decode_attention(q, k_cache, v_cache, eff_len, window=window)
+    return x + o.reshape(b, 1, h * hd) @ p["wo"], k_cache, v_cache
+
+
+def _decode_attn_stack(x, p, cache, pos, windows, cfg: ArchConfig, moe: bool):
+    def body(xc, inputs):
+        lp, kc, vc, w = inputs
+        xc, nk, nv = _attn_step(xc, lp, kc, vc, pos, w, cfg)
+        if moe:
+            xc, _ = _moe_seq(xc, lp, cfg)
+        else:
+            xc = _mlp_seq(xc, lp, cfg)
+        return xc, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (p, cache["k"], cache["v"], windows))
+    return x, {"k": nk, "v": nv}
+
+
+def _decode_mamba_stack(x, p, cache, cfg: ArchConfig):
+    b, _, d = x.shape
+    d_in, ds = 2 * d, cfg.ssm_state
+    h = d_in // MAMBA_HD
+
+    def body(xc, inputs):
+        lp, st, conv_st = inputs
+        xn = rmsnorm(xc, lp["ln"], cfg.norm_eps)[:, 0, :]          # (B,d)
+        z, xv, bb, cc, dt = _mamba_split(xn @ lp["w_in"], d_in, ds)
+        conv_in = jnp.concatenate([xv, bb, cc], axis=-1)            # (B,C)
+        conv_out, conv_st = ssm_lib.conv_decode_step(conv_in, conv_st, lp["conv_w"])
+        conv_out = jax.nn.silu(conv_out)
+        xv, bb, cc = jnp.split(conv_out, [d_in, d_in + ds], axis=-1)
+        log_decay = -jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+        q = jnp.broadcast_to(cc[:, None, :], (b, h, ds))
+        k = jnp.broadcast_to(bb[:, None, :], (b, h, ds))
+        vv = xv.reshape(b, h, MAMBA_HD)
+        y, st = ssm_lib.gla_decode_step(q, k, vv, log_decay, st)
+        y = y + lp["d_skip"][None, :, None] * vv.astype(jnp.float32)
+        y = y.reshape(b, d_in).astype(xc.dtype) * jax.nn.silu(z)
+        return xc + (y @ lp["w_out"])[:, None, :], (st, conv_st)
+
+    x, (st, conv_st) = jax.lax.scan(body, x, (p, cache["state"], cache["conv"]))
+    return x, {"state": st, "conv": conv_st}
+
+
+def _decode_mlstm_stack(x, p, cache, cfg: ArchConfig):
+    b, _, d = x.shape
+    di = 2 * d
+    h = cfg.num_heads
+    hd = di // h
+
+    def body(xc, inputs):
+        lp, st = inputs
+        xn = rmsnorm(xc, lp["ln"], cfg.norm_eps)[:, 0, :]
+        xm, z = jnp.split(xn @ lp["w_up"], 2, axis=-1)
+        q = (xm @ lp["wq"]).reshape(b, h, hd) * hd ** -0.5
+        k = (xm @ lp["wk"]).reshape(b, h, hd) * hd ** -0.5
+        v = (xm @ lp["wv"]).reshape(b, h, hd)
+        gates = (xm @ lp["w_gates"]).astype(jnp.float32).reshape(b, h, 2)
+        log_f = jax.nn.log_sigmoid(gates[..., 0])
+        k = k * jax.nn.sigmoid(gates[..., 1])[..., None].astype(k.dtype)
+        v_aug = jnp.concatenate([v, jnp.ones((b, h, 1), v.dtype)], axis=-1)
+        out, st = ssm_lib.gla_decode_step(q, k, v_aug, log_f, st)
+        num, den = out[..., :hd], out[..., hd:]
+        y = num / jnp.maximum(jnp.abs(den), 1.0)
+        y = y.reshape(b, di).astype(xc.dtype) * jax.nn.silu(z)
+        return xc + (y @ lp["w_down"])[:, None, :], st
+
+    x, st = jax.lax.scan(body, x, (p, cache["state"]))
+    return x, {"state": st}
+
+
+def _decode_slstm(x, p, cache, cfg: ArchConfig):
+    b, _, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    gates = (xn @ p["w_gates"]).reshape(b, 1, h, hd, 4)
+    init = (cache["c"], cache["n"], cache["m"], cache["h"])
+    y, (c, n, m, hh) = ssm_lib.slstm_scan(gates, p["r_kernels"], init=init)
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    return x + y @ p["w_out"], {"c": c, "n": n, "m": m, "h": hh}
+
+
+def _decode_encdec_stack(x, p, cache, pos, cfg: ArchConfig):
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+
+    def body(xc, inputs):
+        lp, kc, vc, xk, xv = inputs
+        xc, nk, nv = _attn_step(xc, lp, kc, vc, pos, 0, cfg)
+        xn = rmsnorm(xc, lp["lnx"], cfg.norm_eps)
+        q = (xn @ lp["xwq"]).reshape(b, 1, h, hd)
+        o = decode_attention(q, xk, xv, xk.shape[1])
+        xc = xc + o.reshape(b, 1, h * hd) @ lp["xwo"]
+        xc = _mlp_seq(xc, lp, cfg)
+        return xc, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (p, cache["k"], cache["v"], cache["xk"], cache["xv"])
+    )
+    return x, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    def _backbone(self, params, x, *, want_cache=False, memory=None):
+        cfg = self.cfg
+        remat = cfg.remat
+        kv_chunk = cfg.kv_chunk
+        caches: Dict[str, Any] = {}
+        aux_total = jnp.zeros((), jnp.float32)
+
+        for g in plan_groups(cfg):
+            if g.kind == "enc_dense":
+                continue  # encoder handled separately
+            p = params[g.key]
+            if g.kind == "dense":
+                windows = jnp.asarray(g.meta["windows"], jnp.int32)
+
+                def body(xc, lp, w):
+                    out, kvp = _attn_seq(xc, lp, cfg, w, kv_chunk)
+                    out = _mlp_seq(out, lp, cfg)
+                    return out, kvp if want_cache else None
+
+                x, ys = scan_group(x, p, body, g.layers, remat, extra_xs=windows)
+                if want_cache:
+                    caches[g.ckey] = {"k": ys[0], "v": ys[1]}
+            elif g.kind == "moe":
+                windows = jnp.asarray(g.meta["windows"], jnp.int32)
+
+                def body(xc, lp, w):
+                    out, kvp = _attn_seq(xc, lp, cfg, w, kv_chunk)
+                    out, aux = _moe_seq(out, lp, cfg)
+                    return out, (kvp, aux) if want_cache else aux
+
+                x, ys = scan_group(x, p, body, g.layers, remat, extra_xs=windows)
+                if want_cache:
+                    caches[g.ckey] = {"k": ys[0][0], "v": ys[0][1]}
+                    aux_total += jnp.sum(ys[1])
+                else:
+                    aux_total += jnp.sum(ys)
+            elif g.kind == "mamba":
+                def body(xc, lp, _):
+                    out, st = _mamba_seq(xc, lp, cfg)
+                    return out, st if want_cache else None
+
+                x, ys = scan_group(x, p, body, g.layers, remat)
+                if want_cache:
+                    caches[g.ckey] = {"state": ys[0], "conv": ys[1]}
+            elif g.kind == "shared_attn":
+                x, (k, v) = _attn_seq(x, p, cfg, g.meta["window"], kv_chunk)
+                x = _mlp_seq(x, p, cfg)
+                if want_cache:
+                    caches[g.ckey] = {"k": k, "v": v}
+            elif g.kind == "mlstm":
+                def body(xc, lp, _):
+                    out, st = _mlstm_seq(xc, lp, cfg)
+                    return out, st if want_cache else None
+
+                x, ys = scan_group(x, p, body, g.layers, remat)
+                if want_cache:
+                    caches[g.ckey] = {"state": ys}
+            elif g.kind == "slstm":
+                x, st = _slstm_seq(x, p, cfg)
+                if want_cache:
+                    caches[g.ckey] = {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+            elif g.kind == "dec_cross":
+                def body(xc, lp, _):
+                    out, kvp = _attn_seq(xc, lp, cfg, 0, kv_chunk)
+                    out, xkv = _cross_seq(out, lp, memory, cfg, kv_chunk)
+                    out = _mlp_seq(out, lp, cfg)
+                    return out, (kvp, xkv) if want_cache else None
+
+                x, ys = scan_group(x, p, body, g.layers, remat)
+                if want_cache:
+                    caches[g.ckey] = {
+                        "k": ys[0][0], "v": ys[0][1],
+                        "xk": ys[1][0], "xv": ys[1][1],
+                    }
+            else:
+                raise ValueError(g.kind)
+        return x, caches, aux_total
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]].astype(jnp.bfloat16)
+        if cfg.family == "vlm":
+            x = jnp.concatenate([batch["patches"].astype(jnp.bfloat16), x], axis=1)
+        return ctx.constrain_batch(x)
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16)
+        remat = cfg.remat
+        for g in plan_groups(cfg):
+            if g.kind != "enc_dense":
+                continue
+
+            def body(xc, lp, w):
+                out, _ = _attn_seq(xc, lp, cfg, w, cfg.kv_chunk, causal=False)
+                return _mlp_seq(out, lp, cfg), None
+
+            x, _ = scan_group(x, params[g.key], body, g.layers, remat)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        xn = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return (xn @ head.astype(xn.dtype)).astype(jnp.float32)
+
+    # ---------------- public entry points ----------------
+
+    def loss_fn(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        memory = self._encode(params, batch["frames"]) if cfg.family == "encdec" else None
+        x = self._embed_inputs(params, batch)
+        x, _, aux = self._backbone(params, x, memory=memory)
+        if cfg.family == "vlm":
+            x = x[:, cfg.patch_tokens:, :]
+        tokens = batch["tokens"]
+        xn = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        # Next-token labels; final position has none (mask 0).
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+        )
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1
+        )
+        loss = chunked_cross_entropy(xn, head, labels, mask,
+                                     chunk=min(512, tokens.shape[1]))
+        return loss + 0.01 * aux
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        memory = self._encode(params, batch["frames"]) if cfg.family == "encdec" else None
+        x = self._embed_inputs(params, batch)
+        x, caches, _ = self._backbone(params, x, want_cache=True, memory=memory)
+        if cfg.family == "vlm":
+            x = x[:, cfg.patch_tokens:, :]
+        logits = self._logits(params, x[:, -1:, :])
+        caches["len"] = jnp.asarray(
+            batch["tokens"].shape[1]
+            + (cfg.patch_tokens if cfg.family == "vlm" else 0),
+            jnp.int32,
+        )
+        return logits, caches
+
+    def decode_step(self, params, cache, tokens):
+        """One-token decode: tokens (B, 1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        pos = cache["len"]
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        new_cache: Dict[str, Any] = {}
+
+        for g in plan_groups(cfg):
+            if g.kind == "enc_dense":
+                continue
+            p = params[g.key]
+            c = cache[g.ckey]
+            if g.kind in ("dense", "moe"):
+                windows = jnp.asarray(g.meta["windows"], jnp.int32)
+                x, new_cache[g.ckey] = _decode_attn_stack(
+                    x, p, c, pos, windows, cfg, moe=(g.kind == "moe")
+                )
+            elif g.kind == "mamba":
+                x, new_cache[g.ckey] = _decode_mamba_stack(x, p, c, cfg)
+            elif g.kind == "shared_attn":
+                w = g.meta["window"]
+                w = 0 if (w and c["k"].shape[1] <= w) else w  # ring == window
+                x, nk, nv = _attn_step(x, p, c["k"], c["v"], pos, w, cfg)
+                x = _mlp_seq(x, p, cfg)
+                new_cache[g.ckey] = {"k": nk, "v": nv}
+            elif g.kind == "mlstm":
+                x, new_cache[g.ckey] = _decode_mlstm_stack(x, p, c, cfg)
+            elif g.kind == "slstm":
+                x, new_cache[g.ckey] = _decode_slstm(x, p, c, cfg)
+            elif g.kind == "dec_cross":
+                x, new_cache[g.ckey] = _decode_encdec_stack(x, p, c, pos, cfg)
+            else:
+                raise ValueError(g.kind)
+
+        logits = self._logits(params, x)
+        new_cache["len"] = pos + 1
+        return logits, new_cache
+
+    # ---------------- cache construction ----------------
+
+    def pad_cache(self, cache: Dict[str, Any], new_len: int) -> Dict[str, Any]:
+        """Grow attention ring caches to ``new_len`` slots (prefill returns
+        length-S caches; decoding past S needs headroom)."""
+
+        def grow(path, leaf):
+            name = None
+            for k in reversed(path):
+                kk = getattr(k, "key", None)
+                if isinstance(kk, str):
+                    name = kk
+                    break
+            if name in ("k", "v") and leaf.ndim >= 4:
+                t_idx = leaf.ndim - 3
+                pad = new_len - leaf.shape[t_idx]
+                if pad > 0:
+                    widths = [(0, 0)] * leaf.ndim
+                    widths[t_idx] = (0, pad)
+                    return jnp.pad(leaf, widths)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(grow, cache)
+
+    def cache_struct(self, batch_size: int, cache_len: int) -> Dict[str, Any]:
+        """Zero-initialized decode cache (or pass to eval_shape for specs).
+
+        ``cache_len`` is the ring size: attention caches hold the last
+        ``min(cache_len, window or inf)`` tokens; SSM states are O(1).
+        """
+        cfg = self.cfg
+        kv, hd = cfg.num_kv_heads, cfg.head_dim_
+        b = batch_size
+        d = cfg.d_model
+        cache: Dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+        for g in plan_groups(cfg):
+            if g.kind == "enc_dense":
+                continue
+            if g.kind in ("dense", "moe"):
+                t = cache_len
+                cache[g.ckey] = {
+                    "k": jnp.zeros((g.layers, b, t, kv, hd), jnp.bfloat16),
+                    "v": jnp.zeros((g.layers, b, t, kv, hd), jnp.bfloat16),
+                }
+            elif g.kind == "shared_attn":
+                t = min(cache_len, g.meta["window"]) if g.meta["window"] else cache_len
+                cache[g.ckey] = {
+                    "k": jnp.zeros((b, t, kv, hd), jnp.bfloat16),
+                    "v": jnp.zeros((b, t, kv, hd), jnp.bfloat16),
+                }
+            elif g.kind == "mamba":
+                d_in = 2 * d
+                h = d_in // MAMBA_HD
+                conv_ch = d_in + 2 * cfg.ssm_state
+                cache[g.ckey] = {
+                    "state": jnp.zeros((g.layers, b, h, cfg.ssm_state, MAMBA_HD), jnp.float32),
+                    "conv": jnp.zeros((g.layers, b, CONV_K - 1, conv_ch), jnp.bfloat16),
+                }
+            elif g.kind == "mlstm":
+                h = cfg.num_heads
+                hd_i = 2 * d // h
+                # fused num+den state: dv = hd + 1 (ones column)
+                cache[g.ckey] = {
+                    "state": jnp.zeros((g.layers, b, h, hd_i, hd_i + 1), jnp.float32),
+                }
+            elif g.kind == "slstm":
+                h = cfg.num_heads
+                hd_i = d // h
+                z = jnp.zeros((b, h, hd_i), jnp.float32)
+                cache[g.ckey] = {"c": z, "n": z, "m": z - 10.0, "h": z}
+            elif g.kind == "dec_cross":
+                cache[g.ckey] = {
+                    "k": jnp.zeros((g.layers, b, cache_len, kv, hd), jnp.bfloat16),
+                    "v": jnp.zeros((g.layers, b, cache_len, kv, hd), jnp.bfloat16),
+                    "xk": jnp.zeros((g.layers, b, cfg.encoder_seq, kv, hd), jnp.bfloat16),
+                    "xv": jnp.zeros((g.layers, b, cfg.encoder_seq, kv, hd), jnp.bfloat16),
+                }
+        return cache

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch avoids the (tokens x experts x capacity) one-hot tensor: per batch
+row, token->expert assignments are sorted by expert id and positions within
+each expert's run come from a cumulative count — the same static-shape
+construction as the rasterizer's fragment lists (sorting.py), and the same
+many-to-one merge structure the paper's GMU accelerates (DESIGN.md §4).
+
+Shapes (per batch row, S tokens, E experts, top-k):
+  capacity C = ceil(S * k / E * capacity_factor)
+  dispatch index (E, C) int32 (-1 pad), combine weight (E, C)
+  expert compute: einsum (B, E, C, d) x (E, d, f) — batched per-expert
+  matmuls that GSPMD shards on the 'model' axis (8 experts/chip at TP=16).
+
+Overflowed tokens (beyond C) are dropped for that expert (standard switch-
+style), counted in ``aux['dropped']``; the load-balancing loss keeps the
+router near-uniform so drops stay rare.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+
+
+def moe_capacity(seq_len: int, num_experts: int, top_k: int, factor: float) -> int:
+    return max(int(math.ceil(seq_len * top_k / num_experts * factor)), top_k)
+
+
+def _dispatch_row(expert_ids: jnp.ndarray, gate_w: jnp.ndarray,
+                  num_experts: int, capacity: int):
+    """Per-row dispatch tables. expert_ids/gate_w: (S*k,). Returns
+    (dest (E, C) token-slot index into the flattened (S*k,) assignment list,
+     keep mask applied to gates)."""
+    sk = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids)
+    e_sorted = expert_ids[order]
+    # position within each expert's run
+    is_start = jnp.concatenate([jnp.ones((1,), bool), e_sorted[1:] != e_sorted[:-1]])
+    run_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, jnp.arange(sk), 0)
+    )
+    pos = jnp.arange(sk) - run_start
+    keep = pos < capacity
+    dest = jnp.full((num_experts, capacity), -1, jnp.int32)
+    dest = dest.at[
+        jnp.where(keep, e_sorted, num_experts),
+        jnp.where(keep, pos, 0),
+    ].set(order.astype(jnp.int32), mode="drop")
+    return dest
+
+
+def moe_ffn(
+    x: jnp.ndarray,             # (B, S, d)
+    router_w: jnp.ndarray,      # (d, E)
+    w_gate: jnp.ndarray,        # (E, d, f)
+    w_up: jnp.ndarray,          # (E, d, f)
+    w_down: jnp.ndarray,        # (E, f, d)
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (out (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e = router_w.shape[1]
+    c = moe_capacity(s, e, top_k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_ids = jax.lax.top_k(probs, top_k)                 # (B,S,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = expert_ids.reshape(b, s * top_k)
+    flat_w = gate_w.reshape(b, s * top_k)
+    dest = jax.vmap(lambda ei, gw: _dispatch_row(ei, gw, e, c))(flat_ids, flat_w)
+
+    token_of = dest // top_k                                 # (B,E,C) source token
+    present = dest >= 0
+    safe_tok = jnp.where(present, token_of, 0)
+
+    xe = jax.vmap(lambda xr, t: xr[t])(x, safe_tok.reshape(b, e * c))
+    xe = xe.reshape(b, e, c, d)
+    xe = jnp.where(present[..., None], xe, 0.0)
+    xe = ctx.constrain_moe_dispatch(xe)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, w_gate)) * jnp.einsum(
+        "becd,edf->becf", xe, w_up
+    )
+    ye = jnp.einsum("becf,efd->becd", h, w_down)             # (B,E,C,d)
+    ye = ctx.constrain_moe_dispatch(ye)
+
+    w_of = jax.vmap(lambda wr, idx: wr[idx])(flat_w, jnp.where(present, dest, 0).reshape(b, e * c))
+    w_of = (w_of.reshape(b, e, c) * present).astype(ye.dtype)
+
+    out = jnp.zeros((b, s, d), ye.dtype)
+    scatter_tok = jnp.where(present, token_of, s).reshape(b, e * c)
+    contrib = (ye * w_of[..., None]).reshape(b, e * c, d)
+    out = jax.vmap(lambda o, t, v: o.at[t].add(v, mode="drop"))(out, scatter_tok, contrib)
+
+    # Switch-style load-balancing auxiliary loss.
+    me = probs.mean(axis=(0, 1))                              # mean router prob
+    assign = jax.nn.one_hot(expert_ids, e).sum(2).mean(axis=(0, 1)) / top_k
+    aux = e * jnp.sum(me * assign)
+    return out.astype(x.dtype), aux.astype(jnp.float32)

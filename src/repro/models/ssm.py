@@ -1,0 +1,140 @@
+"""State-space / recurrent blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+The TPU-native core is ``chunked_gla`` — chunked gated linear attention:
+Mamba2's SSD and xLSTM's mLSTM are both instances of
+
+    S_t = exp(a_t) * S_{t-1} + k_t v_t^T ,   y_t = q_t^T S_t
+
+with different gate parameterizations. The chunked form computes
+within-chunk interactions as (L x L) decay-masked matmuls (MXU work) and
+carries the (dk x dv) state across chunks with a short scan — sequence
+memory O(S * L) instead of O(S^2), and O(1) state for decode (what makes
+these archs eligible for the 500k-token cell).
+
+sLSTM is genuinely sequential (scalar memory with nonlinear recurrent
+mixing) and runs as a ``lax.scan`` over time with the standard exponential-
+gating stabilizer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(
+    q: jnp.ndarray,          # (B, S, H, dk)
+    k: jnp.ndarray,          # (B, S, H, dk)
+    v: jnp.ndarray,          # (B, S, H, dv)
+    log_decay: jnp.ndarray,  # (B, S, H)  log f_t <= 0
+    state: jnp.ndarray | None = None,  # (B, H, dk, dv) initial state
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,dv), final_state (B,H,dk,dv)). float32 internally."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+
+    q = q.astype(jnp.float32).reshape(b, n, chunk, h, dk).swapaxes(0, 1)
+    k = k.astype(jnp.float32).reshape(b, n, chunk, h, dk).swapaxes(0, 1)
+    v = v.astype(jnp.float32).reshape(b, n, chunk, h, dv).swapaxes(0, 1)
+    a = log_decay.astype(jnp.float32).reshape(b, n, chunk, h).swapaxes(0, 1)
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]  # (L, L) j <= i
+
+    def body(carry, inputs):
+        s_prev = carry
+        qc, kc, vc, ac = inputs            # (B,L,H,*) for this chunk
+        cum = jnp.cumsum(ac, axis=1)       # A_i = sum_{t<=i} a_t  (B,L,H)
+        # intra-chunk: scores_ij = exp(A_i - A_j) q_i.k_j for j <= i
+        qk = jnp.einsum("blhd,bmhd->bhlm", qc, kc)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,L,M,H) A_i - A_j
+        decay = jnp.exp(jnp.minimum(decay, 0.0)).transpose(0, 3, 1, 2)
+        scores = qk * decay * causal[None, None]
+        y_intra = jnp.einsum("bhlm,bmhv->blhv", scores, vc)
+        # inter-chunk: exp(A_i) q_i^T S_prev
+        qdec = qc * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("blhd,bhdv->blhv", qdec, s_prev)
+        # state update: S = exp(A_L) S_prev + sum_j exp(A_L - A_j) k_j v_j^T
+        tot = cum[:, -1]                                  # (B,H)
+        kdec = kc * jnp.exp(tot[:, None] - cum)[..., None]
+        s_new = jnp.exp(tot)[..., None, None] * s_prev + jnp.einsum(
+            "blhd,blhv->bhdv", kdec, vc
+        )
+        return s_new, y_intra + y_inter
+
+    final_state, ys = jax.lax.scan(body, state, (q, k, v, a))
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y, final_state
+
+
+def gla_decode_step(
+    q: jnp.ndarray,          # (B, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,          # (B, H, dv)
+    log_decay: jnp.ndarray,  # (B, H)
+    state: jnp.ndarray,      # (B, H, dk, dv)
+):
+    """One-token GLA update (O(1) in sequence — the 500k decode path)."""
+    f = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = f * state + k.astype(jnp.float32)[..., :, None] * v.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y, state
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out
+
+
+def conv_decode_step(x_new: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray):
+    """x_new (B, C); conv_state (B, K-1, C) past inputs. Returns (y, state)."""
+    k = w.shape[0]
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+# --------------------------------------------------------------------------
+# sLSTM: sequential scalar-memory recurrence with exponential gating.
+# --------------------------------------------------------------------------
+
+def slstm_scan(
+    gates: jnp.ndarray,      # (B, S, H, hd, 4) pre-activations [i, f, z, o]
+    r_kernels: jnp.ndarray,  # (4, H, hd, hd) recurrent block-diagonal weights
+    init: tuple | None = None,  # (c, n, m, h) each (B, H, hd)
+):
+    b, s, h, hd = gates.shape[:4]
+    if init is None:
+        zero = jnp.zeros((b, h, hd), jnp.float32)
+        init = (zero, zero, zero - 10.0, zero)
+
+    def step(carry, g_t):
+        c, n, m, h_prev = carry
+        rec = jnp.einsum("ghde,bhe->gbhd", r_kernels.astype(jnp.float32), h_prev)
+        gi = g_t.astype(jnp.float32)
+        log_i = gi[..., 0] + rec[0]
+        log_f = jax.nn.log_sigmoid(gi[..., 1] + rec[1])
+        z = jnp.tanh(gi[..., 2] + rec[2])
+        o = jax.nn.sigmoid(gi[..., 3] + rec[3])
+        m_new = jnp.maximum(log_f + m, log_i)
+        ci = jnp.exp(log_i - m_new)
+        cf = jnp.exp(log_f + m - m_new)
+        c_new = cf * c + ci * z
+        n_new = cf * n + ci
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    carry, hs = jax.lax.scan(step, init, gates.swapaxes(0, 1))
+    return hs.swapaxes(0, 1), carry  # (B,S,H,hd), state

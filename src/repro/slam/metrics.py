@@ -1,0 +1,63 @@
+"""SLAM evaluation metrics: ATE (with SE(3) alignment), PSNR, and the work
+counters that the paper's FPS gains are made of (fragments blended, alive
+Gaussians, pixels rendered)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+def align_umeyama(src: np.ndarray, dst: np.ndarray):
+    """Closed-form SE(3) alignment (no scale) of src -> dst, both (F, 3)."""
+    mu_s, mu_d = src.mean(0), dst.mean(0)
+    cs, cd = src - mu_s, dst - mu_d
+    H = cs.T @ cd
+    U, _, Vt = np.linalg.svd(H)
+    S = np.diag([1.0, 1.0, np.sign(np.linalg.det(Vt.T @ U.T))])
+    R = Vt.T @ S @ U.T
+    t = mu_d - R @ mu_s
+    return R, t
+
+
+def ate_rmse(est_w2c: List[np.ndarray], gt_w2c: List[np.ndarray]) -> float:
+    """Absolute Trajectory Error (RMSE, meters) after SE(3) alignment —
+    the paper's tracking-accuracy metric (reported in cm in tables)."""
+    est_c = np.stack([np.linalg.inv(p)[:3, 3] for p in est_w2c])
+    gt_c = np.stack([np.linalg.inv(p)[:3, 3] for p in gt_w2c])
+    R, t = align_umeyama(est_c, gt_c)
+    aligned = est_c @ R.T + t
+    return float(np.sqrt(np.mean(np.sum((aligned - gt_c) ** 2, axis=-1))))
+
+
+def psnr_np(a: np.ndarray, b: np.ndarray, max_val: float = 1.0) -> float:
+    mse = float(np.mean((a - b) ** 2))
+    return 10.0 * np.log10(max_val**2 / max(mse, 1e-12))
+
+
+@dataclasses.dataclass
+class WorkCounters:
+    """Algorithmic work — the quantities RTGS's speedups reduce."""
+
+    fragments: int = 0        # tile-Gaussian intersections processed
+    pixels: int = 0           # pixels rendered (downsampling reduces this)
+    gaussians_iters: int = 0  # alive Gaussians x iterations (pruning reduces)
+    iterations: int = 0
+    frames: int = 0
+
+    def add(self, fragments: int, pixels: int, alive: int):
+        self.fragments += int(fragments)
+        self.pixels += int(pixels)
+        self.gaussians_iters += int(alive)
+        self.iterations += 1
+
+    def merged_with(self, other: "WorkCounters") -> "WorkCounters":
+        return WorkCounters(
+            fragments=self.fragments + other.fragments,
+            pixels=self.pixels + other.pixels,
+            gaussians_iters=self.gaussians_iters + other.gaussians_iters,
+            iterations=self.iterations + other.iterations,
+            frames=self.frames + other.frames,
+        )

@@ -1,0 +1,385 @@
+"""The 3DGS-SLAM frame loop with RTGS's multi-level redundancy reduction.
+
+Supports the paper's four base algorithms (MonoGS / GS-SLAM / Photo-SLAM /
+SplaTAM keyframe policies; Photo-SLAM swaps in the geometric tracker) with
+the RTGS techniques individually switchable:
+
+  * adaptive Gaussian pruning  (§4.1)  — ``cfg.prune`` is a PruneConfig
+  * dynamic downsampling       (§4.2)  — ``cfg.downsample.enabled``
+  * fragment-list reuse across iterations (Obs. 6 / WSU inter-iteration
+    similarity) — lists rebuilt only at frame starts and pruning-interval
+    boundaries.
+
+The inner step functions are jitted per (factor, stage); the frame loop is
+host Python (keyframe policies are host decisions, matching the GPU systems
+where they run on CPU too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gaussians as G
+from repro.core import lie, pruning
+from repro.core.camera import Camera, Intrinsics
+from repro.core.downsample import DownsampleConfig, downsample_depth, downsample_image, side_factor
+from repro.core.keyframes import KeyframePolicy
+from repro.core.losses import slam_loss
+from repro.core.render import RenderConfig, RenderOutput, render
+from repro.core.sorting import build_fragment_lists, make_tile_grid
+from repro.slam import geometric
+from repro.slam.datasets import SLAMDataset
+from repro.slam.metrics import WorkCounters, ate_rmse, psnr_np
+from repro.train.optimizer import Adam, AdamState, apply_updates
+
+
+@dataclasses.dataclass
+class SLAMConfig:
+    base_algo: str = "monogs"       # monogs | gsslam | photoslam | splatam
+    iters_track: int = 12
+    iters_map: int = 24
+    lr_pose: float = 3e-3
+    lr_map: float = 8e-3
+    lambda_pho: float = 0.8
+    capacity: int = 8192            # Gaussian pool size
+    frag_capacity: int = 128        # K fragments per tile
+    backend: str = "ref"            # rasterizer backend (ref is CPU-fast)
+    prune: Optional[pruning.PruneConfig] = None
+    downsample: DownsampleConfig = dataclasses.field(
+        default_factory=lambda: DownsampleConfig(enabled=False)
+    )
+    keyframe: KeyframePolicy = dataclasses.field(default_factory=KeyframePolicy)
+    map_window: int = 4             # recent keyframes cycled during mapping
+    densify_per_kf: int = 384
+    seed_stride: int = 3            # initial map seeding grid stride
+    seed_opacity: float = 0.7
+
+
+@dataclasses.dataclass
+class SLAMResult:
+    est_w2c: List[np.ndarray]
+    gt_w2c: List[np.ndarray]
+    keyframe_psnr: List[float]
+    ate: float
+    work: WorkCounters
+    alive_per_frame: List[int]
+    wall_time_s: float
+    prune_removed: int
+
+    @property
+    def mean_psnr(self) -> float:
+        return float(np.mean(self.keyframe_psnr)) if self.keyframe_psnr else 0.0
+
+
+def _silence(g: G.GaussianField, masked: jnp.ndarray) -> G.GaussianField:
+    """Mask-pruned or dead Gaussians render as nothing (cached fragment
+    lists may still reference them until the next rebuild)."""
+    off = masked | (~g.alive)
+    return g._replace(logit_o=jnp.where(off, -30.0, g.logit_o))
+
+
+class _Stage:
+    """Per-downsample-factor jitted step functions."""
+
+    def __init__(self, intr: Intrinsics, factor: int, cfg: SLAMConfig):
+        self.factor = factor
+        self.intr = intr.scaled(factor)
+        self.grid = make_tile_grid(self.intr.height, self.intr.width)
+        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend)
+        cfg_l = cfg
+
+        @jax.jit
+        def build(g, masked, w2c):
+            from repro.core.projection import project
+
+            proj = project(_silence(g, masked), w2c_to_cam(self.intr, w2c))
+            return build_fragment_lists(proj, self.grid, cfg_l.frag_capacity)
+
+        @jax.jit
+        def track_step(g, masked, xi, opt_mu, opt_nu, opt_step, base_w2c,
+                       obs_rgb, obs_depth, frag_idx, frag_count):
+            g_eff = _silence(g, masked)
+            frags = _frags(frag_idx, frag_count)
+
+            def loss_fn(xi_, params):
+                gg = G.with_params(g_eff, params)
+                cam = Camera(self.intr, lie.se3_exp(xi_) @ base_w2c)
+                out = render(gg, cam, self.grid, self.rcfg, frags=frags)
+                return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
+                                 obs_depth, cfg_l.lambda_pho)
+
+            params = G.params_of(g_eff)
+            loss, (g_xi, g_params) = jax.value_and_grad(loss_fn, argnums=(0, 1))(xi, params)
+            # Adam on the 6-DoF pose delta.
+            opt = Adam(lr=cfg_l.lr_pose)
+            state = AdamState(step=opt_step, mu=opt_mu, nu=opt_nu)
+            upd, state = opt.update(g_xi, state)
+            return loss, xi + upd, state.mu, state.nu, state.step, g_params
+
+        @jax.jit
+        def map_step(g, masked, opt_state, w2c, obs_rgb, obs_depth,
+                     frag_idx, frag_count):
+            g_eff = _silence(g, masked)
+            frags = _frags(frag_idx, frag_count)
+
+            def loss_fn(params):
+                gg = G.with_params(g_eff, params)
+                cam = Camera(self.intr, w2c)
+                out = render(gg, cam, self.grid, self.rcfg, frags=frags)
+                return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
+                                 obs_depth, cfg_l.lambda_pho)
+
+            params = G.params_of(g)
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            opt = Adam(lr=cfg_l.lr_map)
+            upd, opt_state = opt.update(grads, opt_state)
+            new_params = apply_updates(params, upd)
+            return loss, G.with_params(g, new_params), opt_state
+
+        @jax.jit
+        def render_eval(g, masked, w2c):
+            out = render(_silence(g, masked), w2c_to_cam(self.intr, w2c), self.grid, self.rcfg)
+            return out.image
+
+        self.build = build
+        self.track_step = track_step
+        self.map_step = map_step
+        self.render_eval = render_eval
+
+
+def w2c_to_cam(intr: Intrinsics, w2c) -> Camera:
+    return Camera(intr, w2c)
+
+
+def _frags(idx, count):
+    from repro.core.sorting import FragmentLists
+
+    return FragmentLists(idx=idx, count=count,
+                         overflow=jnp.zeros((), jnp.int32),
+                         total=jnp.zeros((), jnp.int32))
+
+
+def _seed_map(dataset: SLAMDataset, cfg: SLAMConfig) -> G.GaussianField:
+    """Bootstrap the map from frame 0's RGB-D (standard 3DGS-SLAM init)."""
+    f0 = dataset.frames[0]
+    intr = dataset.intrinsics
+    ys = np.arange(0, intr.height, cfg.seed_stride)
+    xs = np.arange(0, intr.width, cfg.seed_stride)
+    vv, uu = np.meshgrid(ys, xs, indexing="ij")
+    uu, vv = uu.reshape(-1), vv.reshape(-1)
+    d = f0.depth[vv, uu]
+    ok = d > 1e-3
+    uu, vv, d = uu[ok], vv[ok], d[ok]
+    x_cam = np.stack(
+        [(uu + 0.5 - intr.cx) / intr.fx * d, (vv + 0.5 - intr.cy) / intr.fy * d, d], -1
+    )
+    c2w = np.linalg.inv(f0.w2c_gt)
+    pts = x_cam @ c2w[:3, :3].T + c2w[:3, 3]
+    cols = f0.rgb[vv, uu]
+    n = min(len(pts), cfg.capacity // 2)
+    mean_scale = float(np.median(d)) / intr.fx * cfg.seed_stride
+    return G.from_points(
+        jnp.asarray(pts[:n]), jnp.asarray(np.clip(cols[:n], 0.02, 0.98)),
+        capacity=cfg.capacity, scale=mean_scale, opacity=cfg.seed_opacity,
+    )
+
+
+def _densify(g: G.GaussianField, frame, w2c_est: np.ndarray, rendered: np.ndarray,
+             intr: Intrinsics, cfg: SLAMConfig, rng: np.random.Generator) -> G.GaussianField:
+    """Add Gaussians where the current render misses observed geometry."""
+    err = np.abs(np.asarray(rendered) - frame.rgb).mean(-1)  # (H, W)
+    valid = frame.depth > 1e-3
+    score = err * valid
+    flat = np.argsort(-score.reshape(-1))[: cfg.densify_per_kf * 2]
+    flat = rng.permutation(flat)[: cfg.densify_per_kf]
+    vv, uu = np.unravel_index(flat, err.shape)
+    d = frame.depth[vv, uu]
+    ok = d > 1e-3
+    vv, uu, d = vv[ok], uu[ok], d[ok]
+    if len(d) == 0:
+        return g
+    x_cam = np.stack(
+        [(uu + 0.5 - intr.cx) / intr.fx * d, (vv + 0.5 - intr.cy) / intr.fy * d, d], -1
+    )
+    c2w = np.linalg.inv(w2c_est)
+    pts = x_cam @ c2w[:3, :3].T + c2w[:3, 3]
+    cols = np.clip(frame.rgb[vv, uu], 0.02, 0.98)
+    scale = float(np.median(d)) / intr.fx * 2.0
+    new = G.from_points(jnp.asarray(pts), jnp.asarray(cols),
+                        capacity=cfg.densify_per_kf, scale=scale, opacity=0.6)
+    return G.insert(g, new, max_new=cfg.densify_per_kf)
+
+
+def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SLAMResult:
+    t0 = time.time()
+    intr = dataset.intrinsics
+    rng = np.random.default_rng(0)
+
+    stages = {1: _Stage(intr, 1, cfg)}
+    if cfg.downsample.enabled:
+        assert intr.height % 64 == 0 and intr.width % 64 == 0, (
+            "dynamic downsampling needs 64-divisible frames (16px tiles at "
+            "the 4x stage); got "
+            f"{intr.height}x{intr.width}"
+        )
+        for f in (2, 4):
+            stages[f] = _Stage(intr, f, cfg)
+
+    g = _seed_map(dataset, cfg)
+    prune_cfg = cfg.prune
+    pstate = (
+        pruning.init_state(g, stages[1].grid.num_tiles, prune_cfg)
+        if prune_cfg else None
+    )
+    masked = jnp.zeros((cfg.capacity,), bool)
+
+    pose = dataset.frames[0].w2c_gt.copy()
+    velocity = np.eye(4, dtype=np.float32)
+    est_w2c: List[np.ndarray] = [pose.copy()]
+    gt_w2c = [f.w2c_gt for f in dataset.frames]
+    keyframes: List[tuple] = []   # (rgb, depth, w2c_est np)
+    kf_psnr: List[float] = []
+    alive_per_frame: List[int] = []
+    work = WorkCounters()
+
+    map_opt = Adam(lr=cfg.lr_map)
+    map_opt_state = map_opt.init(G.params_of(g))
+
+    geo_tracker = geometric.make_geometric_tracker(intr) if cfg.base_algo == "photoslam" else None
+
+    last_kf_idx = 0
+    last_kf_rgb = None
+
+    # --- frame 0: bootstrap mapping -------------------------------------
+    f0 = dataset.frames[0]
+    frags0 = stages[1].build(g, masked, jnp.asarray(pose))
+    for it in range(cfg.iters_map):
+        _, g, map_opt_state = stages[1].map_step(
+            g, masked, map_opt_state, jnp.asarray(pose),
+            jnp.asarray(f0.rgb), jnp.asarray(f0.depth),
+            frags0.idx, frags0.count,
+        )
+        if it % 6 == 5:
+            frags0 = stages[1].build(g, masked, jnp.asarray(pose))
+        work.add(int(frags0.total), intr.height * intr.width, int(g.num_alive()))
+    keyframes.append((f0.rgb, f0.depth, pose.copy()))
+    last_kf_rgb = f0.rgb
+    img0 = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
+    kf_psnr.append(psnr_np(img0, f0.rgb))
+    work.frames += 1
+    alive_per_frame.append(int(g.num_alive()))
+
+    # --- main loop --------------------------------------------------------
+    for idx in range(1, dataset.num_frames):
+        frame = dataset.frames[idx]
+        d_since = idx - last_kf_idx
+
+        pre_kf = cfg.keyframe.is_keyframe(
+            idx, d_since, pose, keyframes[-1][2], frame.rgb, last_kf_rgb
+        ) if cfg.keyframe.kind in ("monogs", "photoslam", "splatam") else False
+        factor = side_factor(d_since, pre_kf, cfg.downsample)
+        stage = stages.get(factor, stages[1])
+
+        # Constant-velocity pose prediction.
+        base = velocity @ pose
+        obs_rgb = jnp.asarray(downsample_image(jnp.asarray(frame.rgb), factor))
+        obs_depth = jnp.asarray(downsample_depth(jnp.asarray(frame.depth), factor))
+
+        if cfg.base_algo == "photoslam":
+            # Geometric (non-rendering) tracking — Photo-SLAM style.
+            prev = dataset.frames[idx - 1]
+            pts_w, cols, _, valid = geometric.backproject_grid(
+                jnp.asarray(prev.rgb), jnp.asarray(prev.depth),
+                jnp.asarray(est_w2c[-1]), intr, stride=4,
+            )
+            xi = jnp.zeros(6)
+            popt = Adam(lr=cfg.lr_pose * 2)
+            pstate_pose = popt.init(xi)
+            for _ in range(cfg.iters_track):
+                _, gxi = geo_tracker(xi, jnp.asarray(base), pts_w, cols, valid,
+                                     jnp.asarray(frame.rgb), jnp.asarray(frame.depth))
+                upd, pstate_pose = popt.update(gxi, pstate_pose)
+                xi = xi + upd
+                work.add(0, (intr.height // 4) * (intr.width // 4), 0)
+        else:
+            frags = stage.build(g, masked, jnp.asarray(base))
+            xi = jnp.zeros(6)
+            mu = jnp.zeros(6)
+            nu = jnp.zeros(6)
+            ostep = jnp.zeros((), jnp.int32)
+            for _ in range(cfg.iters_track):
+                loss, xi, mu, nu, ostep, g_params = stage.track_step(
+                    g, masked, xi, mu, nu, ostep, jnp.asarray(base),
+                    obs_rgb, obs_depth, frags.idx, frags.count,
+                )
+                alive_now = int(g.num_alive()) - int(jnp.sum(masked & g.alive))
+                work.add(int(frags.total), stage.intr.height * stage.intr.width, alive_now)
+
+                if pstate is not None:
+                    pstate = pruning.accumulate(pstate, g_params, prune_cfg)
+                    if int(pstate.iters_left) <= 0:
+                        # Interval boundary: churn, removal, next mask, K adapt.
+                        fresh = stage.build(g, masked, jnp.asarray(lie.se3_exp(xi) @ jnp.asarray(base)))
+                        if pstate.prev_tile_count.shape != fresh.count.shape:
+                            pstate = pstate._replace(prev_tile_count=fresh.count)
+                        pstate, g, _ = pruning.interval_update(pstate, g, fresh.count, prune_cfg)
+                        masked = pstate.masked
+                        frags = fresh
+
+        new_pose = np.asarray(lie.se3_exp(xi) @ jnp.asarray(base))
+        velocity = (new_pose @ np.linalg.inv(pose)).astype(np.float32)
+        pose = new_pose
+        est_w2c.append(pose.copy())
+
+        is_kf = pre_kf if cfg.keyframe.kind != "gsslam" else cfg.keyframe.is_keyframe(
+            idx, d_since, pose, keyframes[-1][2], frame.rgb, last_kf_rgb
+        )
+
+        if is_kf:
+            # Mapping at full resolution (paper: keyframes keep R0).
+            rendered = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
+            g = _densify(g, frame, pose, rendered, intr, cfg, rng)
+            map_opt_state = map_opt.init(G.params_of(g))  # fresh moments after insert
+            keyframes.append((frame.rgb, frame.depth, pose.copy()))
+            if len(keyframes) > cfg.map_window:
+                window = keyframes[-cfg.map_window:]
+            else:
+                window = keyframes
+            frags_m = None
+            for it in range(cfg.iters_map):
+                kf_rgb, kf_depth, kf_pose = window[it % len(window)]
+                frags_m = stages[1].build(g, masked, jnp.asarray(kf_pose))
+                _, g, map_opt_state = stages[1].map_step(
+                    g, masked, map_opt_state, jnp.asarray(kf_pose),
+                    jnp.asarray(kf_rgb), jnp.asarray(kf_depth),
+                    frags_m.idx, frags_m.count,
+                )
+                work.add(int(frags_m.total), intr.height * intr.width, int(g.num_alive()))
+            img = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
+            kf_psnr.append(psnr_np(img, frame.rgb))
+            last_kf_idx = idx
+            last_kf_rgb = frame.rgb
+
+        alive_per_frame.append(int(g.num_alive()))
+        work.frames += 1
+        if verbose and idx % 10 == 0:
+            print(f"[{cfg.base_algo}] frame {idx}: kf={is_kf} factor={factor} "
+                  f"alive={alive_per_frame[-1]} psnr={kf_psnr[-1]:.2f}")
+
+    ate = ate_rmse(est_w2c, gt_w2c)
+    return SLAMResult(
+        est_w2c=est_w2c,
+        gt_w2c=gt_w2c,
+        keyframe_psnr=kf_psnr,
+        ate=ate,
+        work=work,
+        alive_per_frame=alive_per_frame,
+        wall_time_s=time.time() - t0,
+        prune_removed=int(pstate.removed) if pstate is not None else 0,
+    )

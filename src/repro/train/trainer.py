@@ -1,0 +1,175 @@
+"""Training step + fault-tolerant training loop.
+
+``make_train_step`` builds the jittable (loss, params, opt_state) update with
+gradient-accumulation microbatching (``cfg.microbatches``) and optional
+gradient compression (grads cast to bf16 before the cross-replica reduction;
+on a real mesh this halves all-reduce bytes — the knob is visible in the
+dry-run's collective bytes).
+
+``Trainer`` is the production loop: periodic + emergency checkpointing,
+resume (including onto a *different* mesh — elastic scaling), a straggler
+watchdog (per-step wall-time EMA; steps slower than ``straggler_factor`` x
+EMA are logged and counted — on multi-host this is where a re-dispatch/
+drain policy hooks in), and deterministic seekable data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import Model, init_params
+from repro.train.optimizer import Adam, apply_updates, global_norm
+
+
+def make_train_step(
+    model: Model,
+    opt: Adam,
+    microbatches: int = 1,
+    grad_compression: str = "none",  # none | bf16
+    microbatch_specs=None,  # PartitionSpec pytree for the split batch
+    grad_specs=None,        # PartitionSpec pytree matching params (FSDP)
+):
+    """Returns step(params, opt_state, batch) -> (metrics, params, opt_state).
+
+    ``microbatch_specs``: the (B, ...) -> (mb, B/mb, ...) reshape loses GSPMD
+    batch sharding (the compiler can't split a sharded dim), so under a mesh
+    the caller passes the post-split specs and we re-constrain — without
+    this, every activation in the microbatch loop is replicated (measured
+    +390 GB/device on llama3-405b train_4k).
+    """
+
+    def compress(g):
+        if grad_compression == "bf16":
+            return jax.tree.map(lambda a: a.astype(jnp.bfloat16), g)
+        return g
+
+    def loss_and_grads(params, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        if grad_specs is not None:
+            # Pin each microbatch's gradients to the FSDP param sharding:
+            # the cross-replica sync becomes a reduce-scatter of the shard
+            # instead of an all-reduce of the full gradient (16x fewer
+            # collective bytes at 16 microbatches on llama3-405b).
+            grads = jax.lax.with_sharding_constraint(grads, grad_specs)
+        return loss, compress(grads)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = loss_and_grads(params, batch)
+        else:
+            mb = microbatches
+
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+            if microbatch_specs is not None:
+                batches = jax.lax.with_sharding_constraint(
+                    batches, microbatch_specs
+                )
+            zero = jax.tree.map(jnp.zeros_like, params)
+
+            def body(carry, mbatch):
+                loss_acc, gacc = carry
+                l, g = loss_and_grads(params, mbatch)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (loss_acc + l, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), batches)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return metrics, params, opt_state
+
+    return step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    straggler_factor: float = 3.0
+    grad_compression: str = "none"
+    lr: float = 3e-4
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, data_iter,
+                 mesh=None, shardings=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data_iter = data_iter
+        self.mesh = mesh
+        self.model = Model(cfg)
+        self.opt = Adam(lr=tcfg.lr, weight_decay=tcfg.weight_decay,
+                        clip_norm=tcfg.clip_norm)
+        self.step_fn = jax.jit(make_train_step(
+            self.model, self.opt, cfg.microbatches, tcfg.grad_compression
+        ))
+        self.step_times: list[float] = []
+        self.straggler_events: list[int] = []
+        self.history: list[dict] = []
+
+    def init_state(self):
+        params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        return {"params": params, "opt": self.opt.init(params),
+                "step": 0}
+
+    def run(self, state=None, on_step: Optional[Callable] = None):
+        from repro.train import checkpoint as ckpt_lib
+
+        tcfg = self.tcfg
+        if state is None and tcfg.ckpt_dir and ckpt_lib.latest_step(tcfg.ckpt_dir) is not None:
+            template = jax.eval_shape(self.init_state)       # crash resume
+            state = ckpt_lib.restore(tcfg.ckpt_dir, template=template)
+        if state is None:
+            state = self.init_state()
+
+        params, opt_state, start = state["params"], state["opt"], state["step"]
+        ema = None
+        for step in range(start, tcfg.steps):
+            batch = next(self.data_iter)
+            t0 = time.time()
+            try:
+                metrics, params, opt_state = self.step_fn(params, opt_state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+            except Exception:
+                # Emergency checkpoint before surfacing the failure so a
+                # restarted job loses at most one step.
+                if tcfg.ckpt_dir:
+                    ckpt_lib.save(tcfg.ckpt_dir,
+                                  {"params": params, "opt": opt_state, "step": step})
+                raise
+            dt = time.time() - t0
+            self.step_times.append(dt)
+            # Straggler watchdog: EMA of step time, flag outliers.
+            if ema is None:
+                ema = dt
+            else:
+                if dt > tcfg.straggler_factor * ema and step > start + 2:
+                    self.straggler_events.append(step)
+                ema = 0.9 * ema + 0.1 * dt
+            self.history.append({"step": step, **metrics, "time_s": dt})
+            if on_step:
+                on_step(step, metrics)
+            if tcfg.ckpt_dir and (step + 1) % tcfg.ckpt_every == 0:
+                ckpt_lib.save(tcfg.ckpt_dir,
+                              {"params": params, "opt": opt_state, "step": step + 1})
+        if tcfg.ckpt_dir:
+            ckpt_lib.save(tcfg.ckpt_dir,
+                          {"params": params, "opt": opt_state, "step": tcfg.steps})
+        return {"params": params, "opt": opt_state, "step": tcfg.steps}

@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — tests run on the
+single real CPU device; multi-device tests spawn subprocesses."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gaussians as G
+from repro.core.camera import Camera, Intrinsics, look_at
+from repro.core.sorting import build_fragment_lists, make_tile_grid
+from repro.core.projection import project
+
+
+@pytest.fixture(scope="session")
+def tiny_scene():
+    """A small random Gaussian cloud + camera + fragment lists."""
+    key = jax.random.PRNGKey(0)
+    n, cap = 200, 64
+    pts = jax.random.uniform(key, (n, 3), minval=-1, maxval=1) * jnp.array(
+        [1.5, 1.0, 0.5]
+    ) + jnp.array([0.0, 0.0, 3.0])
+    cols = jax.random.uniform(jax.random.PRNGKey(1), (n, 3))
+    g = G.from_points(pts, cols, capacity=n + 56, scale=0.08, opacity=0.8)
+    intr = Intrinsics(fx=80.0, fy=80.0, cx=32.0, cy=32.0, width=64, height=64)
+    w2c = look_at(
+        jnp.zeros(3), jnp.array([0.0, 0.0, 3.0]), jnp.array([0.0, -1.0, 0.0])
+    )
+    cam = Camera(intr, w2c)
+    grid = make_tile_grid(64, 64)
+    proj = project(g, cam)
+    frags = build_fragment_lists(proj, grid, cap)
+    return {"g": g, "cam": cam, "grid": grid, "proj": proj, "frags": frags,
+            "capacity": cap}

@@ -1,0 +1,70 @@
+"""Property tests for the SE(3)/SO(3) machinery (pose-optimization substrate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lie
+
+vec3 = st.lists(st.floats(-2.0, 2.0), min_size=3, max_size=3).map(
+    lambda v: jnp.asarray(v, jnp.float32)
+)
+vec6 = st.lists(st.floats(-1.5, 1.5), min_size=6, max_size=6).map(
+    lambda v: jnp.asarray(v, jnp.float32)
+)
+
+
+@settings(deadline=None, max_examples=30)
+@given(vec3)
+def test_so3_exp_is_rotation(w):
+    R = lie.so3_exp(w)
+    eye = R @ R.T
+    np.testing.assert_allclose(np.asarray(eye), np.eye(3), atol=2e-5)
+    assert abs(float(jnp.linalg.det(R)) - 1.0) < 1e-4
+
+
+@settings(deadline=None, max_examples=30)
+@given(vec3)
+def test_so3_log_roundtrip(w):
+    # restrict to |theta| < pi where log is unique
+    theta = float(jnp.linalg.norm(w))
+    if theta >= np.pi - 0.1:
+        return
+    w2 = lie.so3_log(lie.so3_exp(w))
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=3e-4)
+
+
+@settings(deadline=None, max_examples=30)
+@given(vec6)
+def test_se3_log_roundtrip(xi):
+    if float(jnp.linalg.norm(xi[3:])) >= np.pi - 0.1:
+        return
+    xi2 = lie.se3_log(lie.se3_exp(xi))
+    np.testing.assert_allclose(np.asarray(xi2), np.asarray(xi), atol=1e-3)
+
+
+@settings(deadline=None, max_examples=20)
+@given(vec6, vec6)
+def test_se3_inverse_compose(a, b):
+    A, B = lie.se3_exp(a), lie.se3_exp(b)
+    C = lie.se3_compose(A, B)
+    Cinv = lie.se3_inverse(C)
+    np.testing.assert_allclose(np.asarray(C @ Cinv), np.eye(4), atol=1e-4)
+
+
+def test_exp_at_zero_gradients_finite():
+    """The tracking linearization point: d/dxi at xi=0 must be NaN-free."""
+    pts = jnp.array([[0.3, -0.2, 2.0], [0.0, 0.0, 1.0]])
+
+    def f(xi):
+        return jnp.sum(lie.transform_points(lie.se3_exp(xi), pts) ** 2)
+
+    g = jax.grad(f)(jnp.zeros(6))
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # finite-difference check
+    eps = 1e-4
+    for i in range(6):
+        e = jnp.zeros(6).at[i].set(eps)
+        fd = (f(e) - f(-e)) / (2 * eps)
+        assert abs(float(fd) - float(g[i])) < 1e-2

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests: every assigned arch in REDUCED form runs a
+forward + train step on CPU (shape + finiteness asserts), decode matches
+prefill-free forward for the dense family, and one arch per family shows a
+decreasing training loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.configs.base import ShapeSpec
+from repro.models.lm import Model, init_params
+from repro.train.data import synthetic_batch
+from repro.train.optimizer import Adam
+from repro.train.trainer import make_train_step
+
+SMOKE = ShapeSpec("smoke", seq_len=32, global_batch=2, kind="train")
+ALL_ARCHS = list_archs()
+
+
+def _setup(name):
+    cfg = get_arch(name).reduced()
+    model = Model(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = jax.tree.map(jnp.asarray, synthetic_batch(cfg, SMOKE, 0))
+    return cfg, model, params, batch
+
+
+def test_all_ten_archs_registered():
+    assert len(ALL_ARCHS) == 10
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_forward_and_train_step(name):
+    cfg, model, params, batch = _setup(name)
+    loss = model.loss_fn(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    opt = Adam(lr=1e-3, clip_norm=1.0)
+    step = jax.jit(make_train_step(model, opt, 1))
+    metrics, params2, _ = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_prefill_decode_finite(name):
+    cfg, model, params, batch = _setup(name)
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = batch["tokens"][:, -1:]
+    cache = model.pad_cache(cache, int(cache["len"]) + 4)
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+
+@pytest.mark.parametrize("name", ["llama3-405b", "xlstm-125m", "zamba2-1.2b",
+                                  "qwen3-moe-30b-a3b"])
+def test_decode_consistent_with_forward(name):
+    """logits from (prefill S tokens, decode token S) must match the full
+    forward over S+1 tokens at position S."""
+    import dataclasses
+
+    cfg = get_arch(name).reduced()
+    if cfg.num_experts:
+        # capacity drops depend on sequence length, so decode == forward only
+        # holds without drops; give every expert full capacity for the test.
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=float(cfg.num_experts))
+    model = Model(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (2, 17), 0, cfg.vocab_size)
+
+    full_batch = {"tokens": toks}
+    x = model._embed_inputs(params, full_batch)
+    xx, _, _ = model._backbone(params, x)
+    full_logits = model._logits(params, xx)[:, 15, :]  # predicts token 16
+
+    logits_p, cache = model.prefill(params, {"tokens": toks[:, :16]})
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0]), np.asarray(full_logits), atol=3e-2, rtol=3e-2,
+    )
+    cache = model.pad_cache(cache, 24)
+    logits_d, _ = model.decode_step(params, cache, toks[:, 16:17])
+    want = model._logits(params, model._backbone(
+        params, model._embed_inputs(params, {"tokens": toks})
+    )[0])[:, 16, :]
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]), np.asarray(want),
+                               atol=5e-2, rtol=5e-2)
+
+
+@pytest.mark.parametrize("name", ["phi4-mini-3.8b", "xlstm-125m",
+                                  "qwen3-moe-30b-a3b", "zamba2-1.2b",
+                                  "whisper-large-v3", "llava-next-mistral-7b"])
+def test_loss_decreases(name):
+    cfg = get_arch(name).reduced()
+    model = Model(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = Adam(lr=3e-3, clip_norm=1.0)
+    step = jax.jit(make_train_step(model, opt, 1))
+    state = opt.init(params)
+    batch = jax.tree.map(jnp.asarray, synthetic_batch(cfg, SMOKE, 0))
+    losses = []
+    for _ in range(8):
+        m, params, state = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_microbatched_step_matches_plain():
+    """Gradient accumulation must be numerically equivalent (up to bf16)."""
+    cfg = get_arch("phi4-mini-3.8b").reduced()
+    model = Model(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = jax.tree.map(
+        jnp.asarray, synthetic_batch(cfg, ShapeSpec("s", 32, 4, "train"), 0)
+    )
+    opt = Adam(lr=1e-3)
+    m1, p1, _ = jax.jit(make_train_step(model, opt, 1))(params, opt.init(params), batch)
+    m2, p2, _ = jax.jit(make_train_step(model, opt, 2))(params, opt.init(params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=3e-2,
+        )
+
+
+def test_gemma3_local_global_pattern():
+    from repro.models.lm import plan_groups
+
+    cfg = get_arch("gemma3-27b")
+    g = plan_groups(cfg)[0]
+    w = g.meta["windows"]
+    assert len(w) == 62
+    assert w[5] == 0 and w[11] == 0          # every 6th is global
+    assert all(x == 1024 for i, x in enumerate(w) if (i % 6) != 5)
+
+
+def test_zamba2_shared_block_is_shared():
+    """All shared_attn groups reference one param key; params contain it once."""
+    from repro.models.lm import plan_groups
+
+    cfg = get_arch("zamba2-1.2b").reduced()
+    groups = plan_groups(cfg)
+    shared = [g for g in groups if g.kind == "shared_attn"]
+    assert len(shared) >= 1
+    assert len({g.key for g in shared}) == 1
+    assert len({g.ckey for g in shared}) == len(shared)  # distinct caches
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    assert "shared" in params
+
+
+def test_long_context_ring_cache_is_bounded():
+    """zamba2 long-context decode cache must be O(window), not O(context)."""
+    cfg = get_arch("zamba2-1.2b").reduced()
+    model = Model(cfg)
+    cache = model.cache_struct(batch_size=1, cache_len=4096)
+    for key, c in cache.items():
+        if key.startswith("shared"):
+            assert c["k"].shape[1] <= max(cfg.sliding_window, 1)

@@ -1,0 +1,152 @@
+"""§4.1 adaptive pruning + §4.2 dynamic downsampling unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gaussians as G
+from repro.core import pruning
+from repro.core.downsample import (
+    DownsampleConfig,
+    area_ratio,
+    downsample_depth,
+    downsample_image,
+    side_factor,
+)
+
+
+def _field(n=64, alive=None):
+    g = G.empty(n)
+    alive = jnp.ones((n,), bool) if alive is None else alive
+    return g._replace(alive=alive)
+
+
+def _grads(n, scores):
+    """Param-grad pytree whose Eq.7 score equals ``scores``."""
+    return {
+        "mu": jnp.stack([scores, jnp.zeros_like(scores), jnp.zeros_like(scores)], -1),
+        "log_scale": jnp.zeros((n, 3)),
+        "quat": jnp.zeros((n, 4)),
+        "logit_o": jnp.zeros((n,)),
+        "color": jnp.zeros((n, 3)),
+    }
+
+
+def test_importance_score_eq7():
+    cfg = pruning.PruneConfig(lam=0.8)
+    grads = {
+        "mu": jnp.array([[3.0, 4.0, 0.0]]),       # norm 5
+        "log_scale": jnp.array([[1.0, 0.0, 0.0]]),  # norm 1
+        "quat": jnp.array([[0.0, 2.0, 0.0, 0.0]]),  # norm 2
+        "logit_o": jnp.zeros((1,)),
+        "color": jnp.zeros((1, 3)),
+    }
+    s = pruning.importance_scores(grads, cfg)
+    assert abs(float(s[0]) - (5.0 + 0.8 * 3.0)) < 1e-5
+
+
+def test_masking_selects_lowest_scores():
+    n = 32
+    cfg = pruning.PruneConfig(step_frac=0.25, k0=2)
+    g = _field(n)
+    state = pruning.init_state(g, num_tiles=4, cfg=cfg)
+    scores = jnp.arange(n, dtype=jnp.float32) + 1.0
+    state = state._replace(score=scores)
+    state, g2, did = pruning.interval_update(state, g, jnp.zeros(4, jnp.int32), cfg)
+    assert bool(did)
+    masked = np.asarray(state.masked)
+    assert masked.sum() == 8  # 25% of 32
+    assert masked[:8].all() and not masked[8:].any()  # lowest scores
+
+
+def test_mask_then_permanent_removal():
+    n = 16
+    cfg = pruning.PruneConfig(step_frac=0.5, k0=2, max_ratio=0.9)
+    g = _field(n)
+    state = pruning.init_state(g, 4, cfg)
+    state = state._replace(score=jnp.arange(n, dtype=jnp.float32))
+    state, g, _ = pruning.interval_update(state, g, jnp.zeros(4, jnp.int32), cfg)
+    assert int(g.num_alive()) == n            # masked, not yet removed
+    n_masked = int(state.masked.sum())
+    state, g, _ = pruning.interval_update(state, g, jnp.zeros(4, jnp.int32), cfg)
+    assert int(g.num_alive()) == n - n_masked  # removed one interval later
+    assert int(state.removed) == n_masked
+
+
+def test_prune_cap_respected():
+    n = 40
+    cfg = pruning.PruneConfig(step_frac=0.5, max_ratio=0.5, k0=1)
+    g = _field(n)
+    state = pruning.init_state(g, 4, cfg)
+    for _ in range(10):
+        state = state._replace(score=jax.random.uniform(jax.random.PRNGKey(int(state.removed)), (n,)))
+        state, g, _ = pruning.interval_update(state, g, jnp.zeros(4, jnp.int32), cfg)
+    assert float(pruning.prune_ratio(state)) <= 0.5 + 1e-6
+    assert int(g.num_alive()) >= n // 2
+
+
+def test_interval_adapts_to_churn():
+    cfg = pruning.PruneConfig(k0=8, churn_threshold=0.05, k_min=2, k_max=40)
+    g = _field(8)
+    state = pruning.init_state(g, 4, cfg)
+    state = state._replace(prev_tile_count=jnp.array([10, 10, 10, 10]))
+    # high churn -> halve
+    s2, _, _ = pruning.interval_update(state, g, jnp.array([20, 0, 10, 10]), cfg)
+    assert int(s2.interval) == 4
+    # low churn -> double
+    s3, _, _ = pruning.interval_update(state, g, jnp.array([10, 10, 10, 11]), cfg)
+    assert int(s3.interval) == 16
+
+
+def test_masked_gaussians_render_as_nothing(tiny_scene):
+    from repro.core.render import RenderConfig, render
+    from repro.slam.runner import _silence
+
+    s = tiny_scene
+    g = s["g"]
+    masked = jnp.arange(g.capacity) < g.capacity  # mask everything
+    out = render(_silence(g, masked), s["cam"], s["grid"],
+                 RenderConfig(capacity=s["capacity"]))
+    assert float(out.alpha.max()) < 1e-3
+
+
+# ------------------------- §4.2 downsampling -------------------------------
+
+def test_area_ratio_formula():
+    cfg = DownsampleConfig(m=2.0)
+    assert area_ratio(1, cfg) == 1 / 16
+    assert area_ratio(2, cfg) == 1 / 8
+    assert area_ratio(3, cfg) == 1 / 4
+    assert area_ratio(9, cfg) == 1 / 4  # capped at max
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 12), st.floats(1.1, 4.0))
+def test_quantized_factor_never_below_schedule(d, m):
+    """Power-of-two quantization must never render FEWER pixels than the
+    paper's schedule asks for."""
+    cfg = DownsampleConfig(m=m)
+    f = side_factor(d, is_keyframe=False, cfg=cfg)
+    assert f in (1, 2, 4)
+    assert 1.0 / (f * f) >= area_ratio(d, cfg) - 1e-9
+
+
+def test_keyframes_full_resolution():
+    assert side_factor(5, is_keyframe=True) == 1
+    assert side_factor(1, is_keyframe=False, cfg=DownsampleConfig(enabled=False)) == 1
+
+
+def test_downsample_image_mean():
+    img = jnp.arange(16.0).reshape(4, 4)[..., None]
+    out = downsample_image(img, 2)
+    np.testing.assert_allclose(np.asarray(out[0, 0, 0]), (0 + 1 + 4 + 5) / 4)
+
+
+def test_downsample_depth_ignores_invalid():
+    d = jnp.array([[2.0, 0.0], [0.0, 0.0]])
+    out = downsample_depth(d, 2)
+    assert float(out[0, 0]) == 2.0  # only the valid sample counts
+    d0 = jnp.zeros((2, 2))
+    assert float(downsample_depth(d0, 2)[0, 0]) == 0.0

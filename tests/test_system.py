@@ -1,0 +1,74 @@
+"""End-to-end system tests: the full SLAM loop per base algorithm, with and
+without RTGS's redundancy-reduction techniques (the paper's Tab. 6 shape,
+miniaturized)."""
+
+import numpy as np
+import pytest
+
+from repro.core.downsample import DownsampleConfig
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.slam.datasets import make_dataset
+from repro.slam.runner import SLAMConfig, run_slam
+
+
+@pytest.fixture(scope="module")
+def mini_dataset():
+    return make_dataset("room0", num_frames=10, height=64, width=64,
+                        num_gaussians=1200, frag_capacity=96)
+
+
+def _cfg(**kw):
+    base = dict(
+        iters_track=8, iters_map=14, capacity=3072, frag_capacity=96,
+        keyframe=KeyframePolicy(kind="monogs", interval=4),
+    )
+    base.update(kw)
+    return SLAMConfig(**base)
+
+
+def test_monogs_baseline_tracks_and_maps(mini_dataset):
+    res = run_slam(mini_dataset, _cfg())
+    assert res.ate < 0.30, f"ATE {res.ate*100:.1f}cm too high"
+    assert res.mean_psnr > 17.0, f"PSNR {res.mean_psnr:.1f}dB too low"
+    assert len(res.est_w2c) == mini_dataset.num_frames
+
+
+def test_rtgs_full_reduces_work_keeps_quality(mini_dataset):
+    """RTGS (pruning + downsampling) must reduce algorithmic work while
+    keeping ATE/PSNR in the same regime (paper: <5-10% degradation)."""
+    base = run_slam(mini_dataset, _cfg())
+    ours = run_slam(mini_dataset, _cfg(
+        prune=PruneConfig(k0=5, step_frac=0.08),
+        downsample=DownsampleConfig(enabled=True),
+    ))
+    assert ours.work.pixels < base.work.pixels, "downsampling must cut pixels"
+    assert ours.work.gaussians_iters < base.work.gaussians_iters, (
+        "pruning must cut gaussian-iterations"
+    )
+    assert ours.prune_removed > 0
+    assert ours.ate < max(2.0 * base.ate, 0.35)
+    assert ours.mean_psnr > base.mean_psnr - 3.0
+
+
+@pytest.mark.parametrize("algo,policy", [
+    ("gsslam", KeyframePolicy(kind="gsslam", trans_thresh=0.08, rot_thresh=0.08)),
+    ("photoslam", KeyframePolicy(kind="photoslam", pho_thresh=0.04)),
+    ("splatam", KeyframePolicy(kind="splatam")),
+])
+def test_other_base_algorithms_run(mini_dataset, algo, policy):
+    res = run_slam(mini_dataset, _cfg(base_algo=algo, keyframe=policy,
+                                      iters_track=8, iters_map=10))
+    assert np.isfinite(res.ate)
+    assert res.ate < 0.6
+    assert res.mean_psnr > 14.0
+
+
+def test_splatam_maps_every_frame(mini_dataset):
+    res = run_slam(
+        mini_dataset,
+        _cfg(base_algo="splatam", keyframe=KeyframePolicy(kind="splatam"),
+             iters_track=6, iters_map=8),
+    )
+    # every frame is a keyframe -> one PSNR sample per frame
+    assert len(res.keyframe_psnr) == mini_dataset.num_frames
