@@ -132,6 +132,29 @@ def run(quick: bool = True):
          f"reduction={base.work.pixels / max(down_only.work.pixels,1):.2f}x;"
          f"fragments_base={base.work.fragments};fragments_down={down_only.work.fragments}")
 
+    # --- fused engine: dispatch/sync + wall-time before/after ---------------
+    import time
+
+    small = _scene(6)
+    cfg_kw = dict(iters_track=6, iters_map=10, capacity=3072, frag_capacity=96,
+                  keyframe=KeyframePolicy(kind="monogs", interval=4))
+    for fused in (True, False):
+        run_slam(small, SLAMConfig(fused=fused, **cfg_kw))  # compile
+    t0 = time.time()
+    fused_res = run_slam(small, SLAMConfig(fused=True, **cfg_kw))
+    t_fused = time.time() - t0
+    t0 = time.time()
+    loop_res = run_slam(small, SLAMConfig(fused=False, **cfg_kw))
+    t_loop = time.time() - t0
+    nf = fused_res.work.frames
+    emit("fig17/fused_engine", t_fused * 1e6 / nf,
+         f"disp_per_frame_fused={fused_res.dispatches / nf:.1f};"
+         f"disp_per_frame_loop={loop_res.dispatches / nf:.1f};"
+         f"syncs_per_frame_fused={fused_res.syncs / nf:.1f};"
+         f"syncs_per_frame_loop={loop_res.syncs / nf:.1f};"
+         f"wall_fused_s={t_fused:.2f};wall_loop_s={t_loop:.2f};"
+         f"dispatch_reduction={loop_res.dispatches / max(fused_res.dispatches,1):.2f}x")
+
 
 if __name__ == "__main__":
     run(quick=False)

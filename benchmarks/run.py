@@ -18,6 +18,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_slam_fps,
         fig14_pruning_ablation,
         fig17_breakdown,
         kernel_bench,
@@ -33,6 +34,7 @@ def main() -> None:
         "fig17": fig17_breakdown.run,
         "kernel": kernel_bench.run,
         "roofline": roofline_table.run,
+        "slam_fps": bench_slam_fps.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -44,7 +44,8 @@ def run(quick: bool = True):
                     f"ate_cm={res.ate*100:.2f};psnr_db={res.mean_psnr:.2f};"
                     f"fps={fps:.2f};fragments={res.work.fragments};"
                     f"pixels={res.work.pixels};gauss_iters={res.work.gaussians_iters};"
-                    f"pruned={res.prune_removed}",
+                    f"pruned={res.prune_removed};"
+                    f"disp_per_frame={res.dispatches / res.work.frames:.1f}",
                 )
 
 

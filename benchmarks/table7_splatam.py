@@ -25,7 +25,8 @@ def run(quick: bool = True):
             res.wall_time_s * 1e6 / res.work.frames,
             f"ate_cm={res.ate*100:.2f};psnr_db={res.mean_psnr:.2f};"
             f"peak_gaussians={max(res.alive_per_frame)};"
-            f"gauss_iters={res.work.gaussians_iters}",
+            f"gauss_iters={res.work.gaussians_iters};"
+            f"disp_per_frame={res.dispatches / res.work.frames:.1f}",
         )
 
 

@@ -21,6 +21,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=14)
     ap.add_argument("--scene", default="room0")
+    ap.add_argument("--unfused", action="store_true",
+                    help="per-iteration loop instead of the scan-fused "
+                         "engine (the seed's dispatch pattern)")
     args = ap.parse_args()
 
     print(f"generating synthetic dataset '{args.scene}' ({args.frames} frames)…")
@@ -36,12 +39,16 @@ def main():
             capacity=4096, frag_capacity=96,
             prune=PruneConfig(k0=5, step_frac=0.08) if variant == "rtgs" else None,
             downsample=DownsampleConfig(enabled=(variant == "rtgs")),
+            fused=not args.unfused,
         )
-        print(f"\nrunning {variant} …")
+        print(f"\nrunning {variant} ({'per-iteration' if args.unfused else 'scan-fused'} engine)…")
         res = run_slam(ds, cfg, verbose=True)
         results[variant] = res
+        nf = res.work.frames
         print(f"  ATE {res.ate*100:6.2f} cm | PSNR {res.mean_psnr:5.2f} dB | "
-              f"{res.wall_time_s:5.1f}s | pruned {res.prune_removed}")
+              f"{res.wall_time_s:5.1f}s | pruned {res.prune_removed} | "
+              f"{res.dispatches / nf:.1f} dispatches/frame | "
+              f"{res.syncs / nf:.1f} syncs/frame")
 
     b, r = results["base"], results["rtgs"]
     print("\n=== RTGS vs base (paper Tab. 6 shape) ===")

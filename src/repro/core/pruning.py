@@ -94,6 +94,31 @@ def effective_opacity_mask(g: GaussianField, state: PruneState) -> jnp.ndarray:
     return (~state.masked).astype(jnp.float32)
 
 
+def retile_state(state: PruneState, num_tiles: int,
+                 baselines: dict | None = None) -> PruneState:
+    """Host-side shape adaptation when the render stage (downsample factor)
+    changes between frames: the carried ``prev_tile_count`` must match the
+    new grid's tile count for the scan/cond bundles to trace.
+
+    With ``baselines`` (a host dict keyed by tile count), the displaced
+    grid's baseline is parked there and the target grid's previous baseline
+    is restored, so churn at a later same-grid boundary still compares
+    against real counts.  A grid seen for the first time gets the ``-1``
+    sentinel, which ``interval_update`` reads as "no comparable baseline →
+    churn 0"."""
+    cur = state.prev_tile_count
+    if cur.shape[0] == num_tiles:
+        return state
+    if baselines is not None:
+        baselines[cur.shape[0]] = cur
+        restored = baselines.get(num_tiles)
+        if restored is not None:
+            return state._replace(prev_tile_count=restored)
+    return state._replace(
+        prev_tile_count=jnp.full((num_tiles,), -1, jnp.int32)
+    )
+
+
 def interval_update(
     state: PruneState,
     g: GaussianField,
@@ -128,8 +153,15 @@ def interval_update(
     new_mask = alive & (rank < want)
 
     # 3. Adapt the interval from tile-Gaussian intersection churn (§4.1).
+    # A negative prev_tile_count is the ``retile_state`` sentinel: the grid
+    # changed since the last boundary, so there is no comparable baseline
+    # and churn is defined as zero (interval grows).
     denom = jnp.maximum(jnp.sum(state.prev_tile_count), 1)
-    churn = jnp.sum(jnp.abs(tile_count - state.prev_tile_count)) / denom
+    churn = jnp.where(
+        jnp.any(state.prev_tile_count < 0),
+        0.0,
+        jnp.sum(jnp.abs(tile_count - state.prev_tile_count)) / denom,
+    )
     k_next = jnp.where(
         churn > cfg.churn_threshold,
         jnp.maximum(state.interval // 2, cfg.k_min),
@@ -146,6 +178,36 @@ def interval_update(
         removed=removed,
     )
     return new_state, g._replace(alive=alive), want > 0
+
+
+def cond_interval_update(
+    state: PruneState,
+    g: GaussianField,
+    cur_frags,
+    build_fn,
+    cfg: PruneConfig,
+):
+    """Scan-body form of the interval boundary: when ``iters_left`` has run
+    out, rebuild fragment lists (``build_fn(g, masked) -> FragmentLists``)
+    and run :func:`interval_update` — all under ``lax.cond`` so the whole
+    tracking loop stays a single device dispatch.  Off-boundary iterations
+    pass ``state``/``g``/``cur_frags`` through unchanged.
+
+    Returns ``(state, g, frags, fired)`` with ``fired`` a () bool.
+    """
+
+    def boundary(operand):
+        st, gg, _ = operand
+        fresh = build_fn(gg, st.masked)
+        new_st, new_g, _ = interval_update(st, gg, fresh.count, cfg)
+        return new_st, new_g, fresh
+
+    def steady(operand):
+        return operand
+
+    fired = state.iters_left <= 0
+    state, g, frags = jax.lax.cond(fired, boundary, steady, (state, g, cur_frags))
+    return state, g, frags, fired
 
 
 def prune_ratio(state: PruneState) -> jnp.ndarray:

@@ -99,6 +99,31 @@ def build_fragment_lists(
     return FragmentLists(idx=out, count=count, overflow=overflow, total=total)
 
 
+def stack_fragment_lists(lists: list["FragmentLists"]) -> FragmentLists:
+    """Stack per-keyframe fragment lists along a new leading axis so the
+    mapping scan can carry the whole window cache as one pytree
+    (idx (W,T,K), count (W,T), overflow (W,), total (W,))."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *lists)
+
+
+def index_fragment_lists(stack: FragmentLists, i) -> FragmentLists:
+    """Select window slot ``i`` (a traced () int) from a stacked cache."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False),
+        stack,
+    )
+
+
+def update_fragment_slot(stack: FragmentLists, i, fresh: FragmentLists) -> FragmentLists:
+    """Write a freshly built list into window slot ``i`` of a stacked cache
+    (the Obs. 6 stride-rebuild inside the mapping scan)."""
+    return jax.tree.map(
+        lambda s, f: jax.lax.dynamic_update_index_in_dim(s, f, i, axis=0),
+        stack,
+        fresh,
+    )
+
+
 def tile_churn_ratio(prev_count: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
     """§4.1 tile-Gaussian intersection change ratio controlling the pruning
     interval K (ratio > 5% -> K/2 else 2K)."""

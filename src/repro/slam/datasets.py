@@ -13,6 +13,7 @@ the paper's multi-scene evaluation.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import List
 
 import jax
@@ -112,7 +113,9 @@ def make_dataset(
     seed: int = 0,
     frag_capacity: int = 128,
 ) -> SLAMDataset:
-    key = jax.random.PRNGKey(seed + hash(name) % 1000)
+    # zlib.crc32, not hash(): str hashing is salted per process, which would
+    # silently give every process a different "deterministic" scene.
+    key = jax.random.PRNGKey(seed + zlib.crc32(name.encode()) % 1000)
     pts, cols = _surface_points(key, name, num_gaussians)
     gt = G.from_points(pts, cols, capacity=num_gaussians, scale=0.045, opacity=0.85)
 

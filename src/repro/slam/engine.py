@@ -1,0 +1,469 @@
+"""Fused on-device SLAM step engine (the RTGS frame loop's inner loops).
+
+The paper's thesis is that 3DGS-SLAM wastes most of its time on redundancy
+*between* pipeline stages; the host-level analogue is a frame loop that
+re-enters the accelerator once per optimization iteration and syncs scalars
+back after every step.  This module removes that redundancy: the K tracking
+iterations and the mapping-window iterations each run as a **single
+``jax.lax.scan`` dispatch**, carrying
+
+  (pose delta xi / map params, Adam state, §4.1 ``PruneState``,
+   cached ``FragmentLists``, int32 ``DeviceWork`` counters)
+
+through the scan.  Pruning interval boundaries fire under ``lax.cond``
+(`pruning.cond_interval_update`), fragment lists are rebuilt *inside* the
+scan on boundaries/strides (Obs. 6 reuse), and work counters stay device
+resident — fetched once per frame, not per iteration.
+
+Layering:
+
+  host (runner.py)      keyframe policy, densify/seed, constant velocity —
+                        decisions GPU systems also make on CPU
+  engine (this file)    per-(stage, phase) jitted step bundles; one dispatch
+                        per tracking phase / mapping phase
+  core/*                rendering, sorting, pruning primitives
+
+Both a **fused** path (scan bundles) and an **unfused** per-iteration path
+(the seed's loop shape: one dispatch + 2-3 host syncs per iteration) are
+provided behind the same API; the unfused path exists as the before/after
+baseline for benchmarks and as the parity oracle for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gaussians as G
+from repro.core import lie, pruning
+from repro.core.camera import Camera, Intrinsics
+from repro.core.losses import slam_loss
+from repro.core.render import RenderConfig, render
+from repro.core.sorting import (
+    FragmentLists,
+    build_fragment_lists,
+    index_fragment_lists,
+    make_tile_grid,
+    update_fragment_slot,
+)
+from repro.core.projection import project
+from repro.slam import geometric
+from repro.slam.metrics import DeviceWork, device_work_add, device_work_zero
+from repro.train.optimizer import Adam, AdamState, apply_updates
+
+
+def silence(g: G.GaussianField, masked: jnp.ndarray) -> G.GaussianField:
+    """Mask-pruned or dead Gaussians render as nothing (cached fragment
+    lists may still reference them until the next rebuild)."""
+    off = masked | (~g.alive)
+    return g._replace(logit_o=jnp.where(off, -30.0, g.logit_o))
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Host-observable pipeline overhead the fused engine removes."""
+
+    dispatches: int = 0   # jitted-callable invocations issued
+    syncs: int = 0        # device->host fetches issued
+
+
+@dataclasses.dataclass
+class TrackResult:
+    xi: jnp.ndarray                       # (6,) optimized pose delta (device)
+    g: G.GaussianField                    # field after §4.1 removals
+    pstate: Optional[pruning.PruneState]
+    work: DeviceWork                      # per-phase snapshot (device or ints)
+    losses: jnp.ndarray                   # (K,)
+    fired: np.ndarray | jnp.ndarray       # (K,) bool — boundary iterations
+
+
+@dataclasses.dataclass
+class MapResult:
+    g: G.GaussianField
+    opt_state: AdamState
+    work: DeviceWork
+    losses: jnp.ndarray
+    builds: int = 0
+
+
+def _pose_adam_zero() -> AdamState:
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=jnp.zeros(6), nu=jnp.zeros(6))
+
+
+def _stage_key(intr: Intrinsics, cfg, factor: int):
+    """Everything a _Stage's compiled bundles depend on.  Stages are cached
+    module-wide on this key so repeated ``run_slam`` calls (serving many
+    trajectories) reuse XLA executables instead of re-jitting per engine."""
+    return (
+        intr, factor, cfg.iters_track, cfg.iters_map, cfg.lr_pose, cfg.lr_map,
+        cfg.lambda_pho, cfg.frag_capacity, cfg.backend, cfg.prune,
+        cfg.map_window, cfg.map_rebuild_stride, cfg.scan_unroll,
+    )
+
+
+_STAGE_CACHE: dict = {}
+_GEO_CACHE: dict = {}
+
+
+class _Stage:
+    """Per-downsample-factor step bundles.  Jitted callables are created
+    eagerly (compilation is lazy — a bundle that never runs never compiles).
+    """
+
+    def __init__(self, intr: Intrinsics, cfg, factor: int):
+        self.factor = factor
+        self.intr = intr.scaled(factor)
+        self.grid = make_tile_grid(self.intr.height, self.intr.width)
+        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend)
+        self.pixels = self.intr.height * self.intr.width
+        self.cfg = cfg
+
+        donate = {} if jax.default_backend() == "cpu" else {
+            "donate_argnames": ("g", "pstate", "work")
+        }
+        self.build = jax.jit(self._build_core)
+        self.track_iter = jax.jit(self._track_iter_core)
+        self.map_iter = jax.jit(self._map_iter_core)
+        self.render_eval = jax.jit(self._render_eval_core)
+        self.track_scan_noprune = jax.jit(self._track_scan_noprune)
+        if cfg.prune is not None:
+            self.track_scan_prune = jax.jit(self._track_scan_prune, **donate)
+        donate_map = {} if jax.default_backend() == "cpu" else {
+            "donate_argnames": ("g", "opt_state", "work")
+        }
+        self.map_scan = jax.jit(self._map_scan, **donate_map)
+
+    # ---- cores (pure, shared by fused scans and per-iteration jits) -----
+
+    def _build_core(self, g, masked, w2c) -> FragmentLists:
+        proj = project(silence(g, masked), Camera(self.intr, w2c))
+        return build_fragment_lists(proj, self.grid, self.cfg.frag_capacity)
+
+    def _track_iter_core(self, g, masked, xi, ostate, base_w2c, obs_rgb,
+                         obs_depth, frags):
+        """One tracking iteration: render → Eq. 6 loss → pose Adam step.
+        Returns the per-Gaussian param grads too (§4.1 reuses them)."""
+        g_eff = silence(g, masked)
+
+        def loss_fn(xi_, params):
+            gg = G.with_params(g_eff, params)
+            cam = Camera(self.intr, lie.se3_exp(xi_) @ base_w2c)
+            out = render(gg, cam, self.grid, self.rcfg, frags=frags)
+            return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
+                             obs_depth, self.cfg.lambda_pho)
+
+        params = G.params_of(g_eff)
+        loss, (g_xi, g_params) = jax.value_and_grad(loss_fn, argnums=(0, 1))(xi, params)
+        opt = Adam(lr=self.cfg.lr_pose)
+        upd, ostate = opt.update(g_xi, ostate)
+        return loss, xi + upd, ostate, g_params
+
+    def _map_iter_core(self, g, masked, opt_state, w2c, obs_rgb, obs_depth, frags):
+        g_eff = silence(g, masked)
+
+        def loss_fn(params):
+            gg = G.with_params(g_eff, params)
+            out = render(gg, Camera(self.intr, w2c), self.grid, self.rcfg, frags=frags)
+            return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
+                             obs_depth, self.cfg.lambda_pho)
+
+        params = G.params_of(g)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        opt = Adam(lr=self.cfg.lr_map)
+        upd, opt_state = opt.update(grads, opt_state)
+        return loss, G.with_params(g, apply_updates(params, upd)), opt_state
+
+    def _render_eval_core(self, g, masked, w2c):
+        out = render(silence(g, masked), Camera(self.intr, w2c), self.grid, self.rcfg)
+        return out.image
+
+    # ---- fused bundles ---------------------------------------------------
+
+    def _track_scan_noprune(self, g, masked, base_w2c, obs_rgb, obs_depth,
+                            frags, work):
+        def body(carry, _):
+            xi, ostate, work = carry
+            loss, xi, ostate, _ = self._track_iter_core(
+                g, masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags)
+            alive_eff = jnp.sum((g.alive & ~masked).astype(jnp.int32))
+            work = device_work_add(work, frags.total, self.pixels, alive_eff)
+            return (xi, ostate, work), (loss, jnp.asarray(False))
+
+        (xi, _, work), (losses, fired) = jax.lax.scan(
+            body, (jnp.zeros(6), _pose_adam_zero(), work), None,
+            length=self.cfg.iters_track,
+            unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
+        return xi, work, losses, fired
+
+    def _track_scan_prune(self, g, pstate, base_w2c, obs_rgb, obs_depth,
+                          frags, work):
+        prune_cfg = self.cfg.prune
+
+        def body(carry, _):
+            xi, ostate, g, pstate, frags, work = carry
+            loss, xi, ostate, g_params = self._track_iter_core(
+                g, pstate.masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags)
+            alive_eff = jnp.sum((g.alive & ~pstate.masked).astype(jnp.int32))
+            work = device_work_add(work, frags.total, self.pixels, alive_eff)
+            pstate = pruning.accumulate(pstate, g_params, prune_cfg)
+
+            def build_fn(gg, mm):
+                return self._build_core(gg, mm, lie.se3_exp(xi) @ base_w2c)
+
+            pstate, g, frags, fired = pruning.cond_interval_update(
+                pstate, g, frags, build_fn, prune_cfg)
+            return (xi, ostate, g, pstate, frags, work), (loss, fired)
+
+        carry0 = (jnp.zeros(6), _pose_adam_zero(), g, pstate, frags, work)
+        (xi, _, g, pstate, frags, work), (losses, fired) = jax.lax.scan(
+            body, carry0, None, length=self.cfg.iters_track,
+            unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
+        return xi, g, pstate, work, losses, fired
+
+    def _map_scan(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, work):
+        """Whole mapping phase in one dispatch: build the window's fragment
+        caches (vmapped), then scan the iterations, cycling keyframes and
+        stride-rebuilding the active slot's cache (Obs. 6 reuse).
+
+        The window length is static (one executable per length, cached
+        module-wide) so no padded slots are ever built."""
+        stride = self.cfg.map_rebuild_stride
+        w_len = kf_w2c.shape[0]
+        cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+
+        def body(carry, it):
+            g, opt_state, cache, work = carry
+            slot = jnp.mod(it, w_len)
+            pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0, keepdims=False)
+            rgb = jax.lax.dynamic_index_in_dim(kf_rgb, slot, 0, keepdims=False)
+            depth = jax.lax.dynamic_index_in_dim(kf_depth, slot, 0, keepdims=False)
+            frags = index_fragment_lists(cache, slot)
+            loss, g, opt_state = self._map_iter_core(
+                g, masked, opt_state, pose, rgb, depth, frags)
+            work = device_work_add(work, frags.total, self.pixels,
+                                   jnp.sum(g.alive.astype(jnp.int32)))
+
+            def rebuild(c):
+                return update_fragment_slot(c, slot, self._build_core(g, masked, pose))
+
+            cache = jax.lax.cond(jnp.mod(it + 1, stride) == 0, rebuild,
+                                 lambda c: c, cache)
+            return (g, opt_state, cache, work), loss
+
+        (g, opt_state, _, work), losses = jax.lax.scan(
+            body, (g, opt_state, cache, work),
+            jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
+            unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
+        return g, opt_state, work, losses
+
+
+class StepEngine:
+    """The on-device optimization engine behind ``run_slam``.
+
+    Host code hands a frame's observations to ``track_frame`` /
+    ``map_frame`` and gets back device-resident results; with
+    ``cfg.fused=True`` (default) each phase is one scan dispatch, with
+    ``fused=False`` the seed's per-iteration loop runs instead (baseline
+    for benchmarks/tests).
+    """
+
+    def __init__(self, intr: Intrinsics, cfg):
+        self.intr = intr
+        self.cfg = cfg
+        self.stats = EngineStats()
+        self._geo = None
+        self._geo_vg = None
+        # Per-grid churn baselines parked across downsample-factor switches
+        # (see pruning.retile_state).
+        self._tile_baselines: dict = {}
+
+    # ---- bookkeeping -----------------------------------------------------
+
+    def _call(self, fn, *args, **kw):
+        self.stats.dispatches += 1
+        return fn(*args, **kw)
+
+    def fetch(self, tree):
+        """Device→host sync, counted.  Use once per frame, not per iteration."""
+        self.stats.syncs += 1
+        return jax.device_get(tree)
+
+    def stage(self, factor: int) -> _Stage:
+        key = _stage_key(self.intr, self.cfg, factor)
+        if key not in _STAGE_CACHE:
+            _STAGE_CACHE[key] = _Stage(self.intr, self.cfg, factor)
+        return _STAGE_CACHE[key]
+
+    # ---- phases ----------------------------------------------------------
+
+    def render_eval(self, g, masked, w2c, factor: int = 1):
+        return self._call(self.stage(factor).render_eval, g, masked, jnp.asarray(w2c))
+
+    def build_lists(self, g, masked, w2c, factor: int = 1) -> FragmentLists:
+        return self._call(self.stage(factor).build, g, masked, jnp.asarray(w2c))
+
+    def track_frame(self, factor: int, g, pstate, masked, base_w2c, obs_rgb,
+                    obs_depth) -> TrackResult:
+        """Run the K tracking iterations for one frame.  ``pstate=None``
+        disables §4.1; otherwise ``masked`` is ignored in favor of
+        ``pstate.masked``."""
+        st = self.stage(factor)
+        base = jnp.asarray(base_w2c)
+        if pstate is not None:
+            pstate = pruning.retile_state(pstate, st.grid.num_tiles,
+                                          self._tile_baselines)
+            masked = pstate.masked
+        frags = self._call(st.build, g, masked, base)
+        if self.cfg.fused:
+            return self._track_fused(st, g, pstate, masked, base, obs_rgb,
+                                     obs_depth, frags)
+        return self._track_unfused(st, g, pstate, masked, base, obs_rgb,
+                                   obs_depth, frags)
+
+    def _track_fused(self, st, g, pstate, masked, base, obs_rgb, obs_depth, frags):
+        work = device_work_zero()
+        if pstate is None:
+            xi, work, losses, fired = self._call(
+                st.track_scan_noprune, g, masked, base, obs_rgb, obs_depth,
+                frags, work)
+            return TrackResult(xi=xi, g=g, pstate=None, work=work,
+                               losses=losses, fired=fired)
+        xi, g, pstate, work, losses, fired = self._call(
+            st.track_scan_prune, g, pstate, base, obs_rgb, obs_depth, frags, work)
+        return TrackResult(xi=xi, g=g, pstate=pstate, work=work,
+                           losses=losses, fired=fired)
+
+    def _track_unfused(self, st, g, pstate, masked, base, obs_rgb, obs_depth, frags):
+        """Seed loop shape: one dispatch per iteration, per-iteration host
+        syncs for counters and the pruning boundary check."""
+        cfg = self.cfg
+        prune_cfg = cfg.prune
+        xi = jnp.zeros(6)
+        ostate = _pose_adam_zero()
+        fr, px, gi, it_n = 0, 0, 0, 0
+        losses, fired = [], []
+        for _ in range(cfg.iters_track):
+            loss, xi, ostate, g_params = self._call(
+                st.track_iter, g, masked, xi, ostate, base, obs_rgb,
+                obs_depth, frags)
+            self.stats.syncs += 3   # frags.total, num_alive, masked&alive
+            alive_eff = int(g.num_alive()) - int(jnp.sum(masked & g.alive))
+            fr += int(frags.total)
+            px += st.pixels
+            gi += alive_eff
+            it_n += 1
+            losses.append(loss)
+            did_fire = False
+            if pstate is not None:
+                pstate = pruning.accumulate(pstate, g_params, prune_cfg)
+                self.stats.syncs += 1   # boundary check
+                if int(pstate.iters_left) <= 0:
+                    fresh = self._call(
+                        st.build, g, pstate.masked,
+                        lie.se3_exp(xi) @ base)
+                    pstate, g, _ = pruning.interval_update(
+                        pstate, g, fresh.count, prune_cfg)
+                    masked = pstate.masked
+                    frags = fresh
+                    did_fire = True
+            fired.append(did_fire)
+        work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
+                          iterations=it_n)
+        return TrackResult(xi=xi, g=g, pstate=pstate, work=work,
+                           losses=jnp.stack(losses), fired=np.asarray(fired))
+
+    def map_frame(self, g, opt_state, masked, window: List[Tuple]) -> MapResult:
+        """Run the mapping iterations for one keyframe (or the frame-0
+        bootstrap).  ``window`` is the host list of (rgb, depth, w2c np)
+        keyframes, oldest first, cycled across iterations."""
+        cfg = self.cfg
+        st = self.stage(1)
+        w_len = len(window)
+        assert 1 <= w_len <= cfg.map_window
+        if self.cfg.fused:
+            kf_w2c = jnp.asarray(np.stack([w[2] for w in window]))
+            kf_rgb = jnp.asarray(np.stack([np.asarray(w[0]) for w in window]))
+            kf_depth = jnp.asarray(np.stack([np.asarray(w[1]) for w in window]))
+            work = device_work_zero()
+            g, opt_state, work, losses = self._call(
+                st.map_scan, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
+                work)
+            builds = w_len + cfg.iters_map // cfg.map_rebuild_stride
+            return MapResult(g=g, opt_state=opt_state, work=work,
+                             losses=losses, builds=builds)
+
+        # -- unfused: per-iteration dispatches, per-iteration counter syncs.
+        cache = []
+        builds = 0
+        for rgb, depth, w2c in window:
+            cache.append(self._call(st.build, g, masked, jnp.asarray(w2c)))
+            builds += 1
+        fr, px, gi, it_n = 0, 0, 0, 0
+        losses = []
+        for it in range(cfg.iters_map):
+            slot = it % w_len
+            rgb, depth, w2c = window[slot]
+            frags = cache[slot]
+            loss, g, opt_state = self._call(
+                st.map_iter, g, masked, opt_state, jnp.asarray(w2c),
+                jnp.asarray(rgb), jnp.asarray(depth), frags)
+            self.stats.syncs += 2   # frags.total, num_alive
+            fr += int(frags.total)
+            px += st.pixels
+            gi += int(g.num_alive())
+            it_n += 1
+            losses.append(loss)
+            if (it + 1) % cfg.map_rebuild_stride == 0:
+                cache[slot] = self._call(st.build, g, masked, jnp.asarray(w2c))
+                builds += 1
+        work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
+                          iterations=it_n)
+        return MapResult(g=g, opt_state=opt_state, work=work,
+                         losses=jnp.stack(losses), builds=builds)
+
+    def geo_track_frame(self, base_w2c, pts_w, cols, valid, rgb, depth):
+        """Photo-SLAM geometric tracking (no rendering, no pruning): the K
+        pose iterations as one scan dispatch (fused) or K dispatches."""
+        cfg = self.cfg
+        if self._geo is None:
+            key = (self.intr, cfg.lr_pose, cfg.iters_track)
+            if key not in _GEO_CACHE:
+                geo_vg = geometric.make_geometric_tracker(self.intr)
+
+                def geo_scan(base, pts, cs, vl, im, dp):
+                    popt = Adam(lr=cfg.lr_pose * 2)
+
+                    def body(carry, _):
+                        xi, ostate = carry
+                        _, gxi = geo_vg(xi, base, pts, cs, vl, im, dp)
+                        upd, ostate = popt.update(gxi, ostate)
+                        return (xi + upd, ostate), None
+
+                    (xi, _), _ = jax.lax.scan(
+                        body, (jnp.zeros(6), popt.init(jnp.zeros(6))), None,
+                        length=cfg.iters_track)
+                    return xi
+
+                _GEO_CACHE[key] = (jax.jit(geo_scan), geo_vg)
+            self._geo, self._geo_vg = _GEO_CACHE[key]
+
+        base = jnp.asarray(base_w2c)
+        track_px = (self.intr.height // 4) * (self.intr.width // 4)
+        work = DeviceWork(fragments=0, pixels=track_px * cfg.iters_track,
+                          gaussians_iters=0, iterations=cfg.iters_track)
+        if cfg.fused:
+            xi = self._call(self._geo, base, pts_w, cols, valid, rgb, depth)
+            return xi, work
+        popt = Adam(lr=cfg.lr_pose * 2)
+        xi = jnp.zeros(6)
+        pstate_pose = popt.init(xi)
+        for _ in range(cfg.iters_track):
+            _, gxi = self._call(self._geo_vg, xi, base, pts_w, cols, valid,
+                                rgb, depth)
+            upd, pstate_pose = popt.update(gxi, pstate_pose)
+            xi = xi + upd
+        return xi, work

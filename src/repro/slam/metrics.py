@@ -1,13 +1,49 @@
 """SLAM evaluation metrics: ATE (with SE(3) alignment), PSNR, and the work
 counters that the paper's FPS gains are made of (fragments blended, alive
-Gaussians, pixels rendered)."""
+Gaussians, pixels rendered).
+
+Two counter forms:
+
+* :class:`WorkCounters` — host-side running totals over a whole run (Python
+  ints, no overflow), the public accounting surface of ``SLAMResult``.
+* :class:`DeviceWork` — a small int32 pytree threaded through the engine's
+  ``lax.scan`` carries so per-iteration accounting happens **on device**;
+  it is fetched once per frame (not per iteration) and absorbed into the
+  host ``WorkCounters``.  Keeping it per-frame bounds the int32 range.
+"""
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, NamedTuple
 
+import jax.numpy as jnp
 import numpy as np
+
+
+class DeviceWork(NamedTuple):
+    """Per-frame on-device work accumulator (int32 scalars)."""
+
+    fragments: jnp.ndarray       # tile-Gaussian intersections processed
+    pixels: jnp.ndarray          # pixels rendered
+    gaussians_iters: jnp.ndarray  # alive Gaussians x iterations
+    iterations: jnp.ndarray
+
+
+def device_work_zero() -> DeviceWork:
+    z = jnp.zeros((), jnp.int32)
+    return DeviceWork(fragments=z, pixels=z, gaussians_iters=z, iterations=z)
+
+
+def device_work_add(w: DeviceWork, fragments, pixels, alive) -> DeviceWork:
+    """jit/scan-safe equivalent of ``WorkCounters.add``; all args () int32."""
+    one = jnp.asarray(1, jnp.int32)
+    return DeviceWork(
+        fragments=w.fragments + jnp.asarray(fragments, jnp.int32),
+        pixels=w.pixels + jnp.asarray(pixels, jnp.int32),
+        gaussians_iters=w.gaussians_iters + jnp.asarray(alive, jnp.int32),
+        iterations=w.iterations + one,
+    )
 
 
 def align_umeyama(src: np.ndarray, dst: np.ndarray):
@@ -52,6 +88,14 @@ class WorkCounters:
         self.pixels += int(pixels)
         self.gaussians_iters += int(alive)
         self.iterations += 1
+
+    def absorb(self, dev) -> None:
+        """Fold a fetched per-frame :class:`DeviceWork` snapshot (already on
+        host, e.g. via ``jax.device_get``) into the running totals."""
+        self.fragments += int(dev.fragments)
+        self.pixels += int(dev.pixels)
+        self.gaussians_iters += int(dev.gaussians_iters)
+        self.iterations += int(dev.iterations)
 
     def merged_with(self, other: "WorkCounters") -> "WorkCounters":
         return WorkCounters(

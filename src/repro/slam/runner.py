@@ -6,13 +6,17 @@ the RTGS techniques individually switchable:
 
   * adaptive Gaussian pruning  (§4.1)  — ``cfg.prune`` is a PruneConfig
   * dynamic downsampling       (§4.2)  — ``cfg.downsample.enabled``
-  * fragment-list reuse across iterations (Obs. 6 / WSU inter-iteration
-    similarity) — lists rebuilt only at frame starts and pruning-interval
-    boundaries.
+  * fragment-list reuse (Obs. 6 / WSU inter-iteration similarity) — lists
+    cached per keyframe window slot and rebuilt on ``map_rebuild_stride``
+    and §4.1 interval boundaries, not per iteration.
 
-The inner step functions are jitted per (factor, stage); the frame loop is
-host Python (keyframe policies are host decisions, matching the GPU systems
-where they run on CPU too).
+This file is the **host layer** only: keyframe policy, densification and
+map seeding (Python/NumPy decisions — the GPU systems run these on CPU
+too).  The inner optimization loops live in :mod:`repro.slam.engine` as
+per-(stage, phase) jitted step bundles; with ``cfg.fused=True`` (default)
+the K tracking iterations and the mapping-window iterations each execute
+as a single ``lax.scan`` dispatch with device-resident pruning state and
+work counters, fetched once per frame.
 """
 
 from __future__ import annotations
@@ -21,7 +25,6 @@ import dataclasses
 import time
 from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,13 +33,11 @@ from repro.core import lie, pruning
 from repro.core.camera import Camera, Intrinsics
 from repro.core.downsample import DownsampleConfig, downsample_depth, downsample_image, side_factor
 from repro.core.keyframes import KeyframePolicy
-from repro.core.losses import slam_loss
-from repro.core.render import RenderConfig, RenderOutput, render
-from repro.core.sorting import build_fragment_lists, make_tile_grid
 from repro.slam import geometric
 from repro.slam.datasets import SLAMDataset
+from repro.slam.engine import StepEngine, silence as _silence  # noqa: F401 (re-export)
 from repro.slam.metrics import WorkCounters, ate_rmse, psnr_np
-from repro.train.optimizer import Adam, AdamState, apply_updates
+from repro.train.optimizer import Adam
 
 
 @dataclasses.dataclass
@@ -59,6 +60,12 @@ class SLAMConfig:
     densify_per_kf: int = 384
     seed_stride: int = 3            # initial map seeding grid stride
     seed_opacity: float = 0.7
+    fused: bool = True              # scan-fused engine vs per-iteration loop
+    map_rebuild_stride: int = 6     # mapping fragment-list rebuild cadence
+    scan_unroll: int = 4            # lax.scan unroll (XLA:CPU runs rolled
+                                    # loop bodies ~30% slower; unrolling
+                                    # trades compile time for straight-line
+                                    # code while keeping ONE dispatch)
 
 
 @dataclasses.dataclass
@@ -71,98 +78,16 @@ class SLAMResult:
     alive_per_frame: List[int]
     wall_time_s: float
     prune_removed: int
+    dispatches: int = 0             # jitted calls issued by the engine
+    syncs: int = 0                  # device->host fetches issued
 
     @property
     def mean_psnr(self) -> float:
         return float(np.mean(self.keyframe_psnr)) if self.keyframe_psnr else 0.0
 
 
-def _silence(g: G.GaussianField, masked: jnp.ndarray) -> G.GaussianField:
-    """Mask-pruned or dead Gaussians render as nothing (cached fragment
-    lists may still reference them until the next rebuild)."""
-    off = masked | (~g.alive)
-    return g._replace(logit_o=jnp.where(off, -30.0, g.logit_o))
-
-
-class _Stage:
-    """Per-downsample-factor jitted step functions."""
-
-    def __init__(self, intr: Intrinsics, factor: int, cfg: SLAMConfig):
-        self.factor = factor
-        self.intr = intr.scaled(factor)
-        self.grid = make_tile_grid(self.intr.height, self.intr.width)
-        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend)
-        cfg_l = cfg
-
-        @jax.jit
-        def build(g, masked, w2c):
-            from repro.core.projection import project
-
-            proj = project(_silence(g, masked), w2c_to_cam(self.intr, w2c))
-            return build_fragment_lists(proj, self.grid, cfg_l.frag_capacity)
-
-        @jax.jit
-        def track_step(g, masked, xi, opt_mu, opt_nu, opt_step, base_w2c,
-                       obs_rgb, obs_depth, frag_idx, frag_count):
-            g_eff = _silence(g, masked)
-            frags = _frags(frag_idx, frag_count)
-
-            def loss_fn(xi_, params):
-                gg = G.with_params(g_eff, params)
-                cam = Camera(self.intr, lie.se3_exp(xi_) @ base_w2c)
-                out = render(gg, cam, self.grid, self.rcfg, frags=frags)
-                return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
-                                 obs_depth, cfg_l.lambda_pho)
-
-            params = G.params_of(g_eff)
-            loss, (g_xi, g_params) = jax.value_and_grad(loss_fn, argnums=(0, 1))(xi, params)
-            # Adam on the 6-DoF pose delta.
-            opt = Adam(lr=cfg_l.lr_pose)
-            state = AdamState(step=opt_step, mu=opt_mu, nu=opt_nu)
-            upd, state = opt.update(g_xi, state)
-            return loss, xi + upd, state.mu, state.nu, state.step, g_params
-
-        @jax.jit
-        def map_step(g, masked, opt_state, w2c, obs_rgb, obs_depth,
-                     frag_idx, frag_count):
-            g_eff = _silence(g, masked)
-            frags = _frags(frag_idx, frag_count)
-
-            def loss_fn(params):
-                gg = G.with_params(g_eff, params)
-                cam = Camera(self.intr, w2c)
-                out = render(gg, cam, self.grid, self.rcfg, frags=frags)
-                return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
-                                 obs_depth, cfg_l.lambda_pho)
-
-            params = G.params_of(g)
-            loss, grads = jax.value_and_grad(loss_fn)(params)
-            opt = Adam(lr=cfg_l.lr_map)
-            upd, opt_state = opt.update(grads, opt_state)
-            new_params = apply_updates(params, upd)
-            return loss, G.with_params(g, new_params), opt_state
-
-        @jax.jit
-        def render_eval(g, masked, w2c):
-            out = render(_silence(g, masked), w2c_to_cam(self.intr, w2c), self.grid, self.rcfg)
-            return out.image
-
-        self.build = build
-        self.track_step = track_step
-        self.map_step = map_step
-        self.render_eval = render_eval
-
-
 def w2c_to_cam(intr: Intrinsics, w2c) -> Camera:
     return Camera(intr, w2c)
-
-
-def _frags(idx, count):
-    from repro.core.sorting import FragmentLists
-
-    return FragmentLists(idx=idx, count=count,
-                         overflow=jnp.zeros((), jnp.int32),
-                         total=jnp.zeros((), jnp.int32))
 
 
 def _seed_map(dataset: SLAMDataset, cfg: SLAMConfig) -> G.GaussianField:
@@ -221,20 +146,18 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
     intr = dataset.intrinsics
     rng = np.random.default_rng(0)
 
-    stages = {1: _Stage(intr, 1, cfg)}
+    engine = StepEngine(intr, cfg)
     if cfg.downsample.enabled:
         assert intr.height % 64 == 0 and intr.width % 64 == 0, (
             "dynamic downsampling needs 64-divisible frames (16px tiles at "
             "the 4x stage); got "
             f"{intr.height}x{intr.width}"
         )
-        for f in (2, 4):
-            stages[f] = _Stage(intr, f, cfg)
 
     g = _seed_map(dataset, cfg)
     prune_cfg = cfg.prune
     pstate = (
-        pruning.init_state(g, stages[1].grid.num_tiles, prune_cfg)
+        pruning.init_state(g, engine.stage(1).grid.num_tiles, prune_cfg)
         if prune_cfg else None
     )
     masked = jnp.zeros((cfg.capacity,), bool)
@@ -251,29 +174,25 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
     map_opt = Adam(lr=cfg.lr_map)
     map_opt_state = map_opt.init(G.params_of(g))
 
-    geo_tracker = geometric.make_geometric_tracker(intr) if cfg.base_algo == "photoslam" else None
-
     last_kf_idx = 0
     last_kf_rgb = None
 
+    def cur_masked():
+        return pstate.masked if pstate is not None else masked
+
     # --- frame 0: bootstrap mapping -------------------------------------
     f0 = dataset.frames[0]
-    frags0 = stages[1].build(g, masked, jnp.asarray(pose))
-    for it in range(cfg.iters_map):
-        _, g, map_opt_state = stages[1].map_step(
-            g, masked, map_opt_state, jnp.asarray(pose),
-            jnp.asarray(f0.rgb), jnp.asarray(f0.depth),
-            frags0.idx, frags0.count,
-        )
-        if it % 6 == 5:
-            frags0 = stages[1].build(g, masked, jnp.asarray(pose))
-        work.add(int(frags0.total), intr.height * intr.width, int(g.num_alive()))
+    mres = engine.map_frame(g, map_opt_state, cur_masked(),
+                            [(f0.rgb, f0.depth, pose.copy())])
+    g, map_opt_state = mres.g, mres.opt_state
     keyframes.append((f0.rgb, f0.depth, pose.copy()))
     last_kf_rgb = f0.rgb
-    img0 = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
-    kf_psnr.append(psnr_np(img0, f0.rgb))
+    img0 = engine.render_eval(g, cur_masked(), pose)
+    wsnap, alive0, img0 = engine.fetch((mres.work, g.num_alive(), img0))
+    work.absorb(wsnap)
+    kf_psnr.append(psnr_np(np.asarray(img0), f0.rgb))
     work.frames += 1
-    alive_per_frame.append(int(g.num_alive()))
+    alive_per_frame.append(int(alive0))
 
     # --- main loop --------------------------------------------------------
     for idx in range(1, dataset.num_frames):
@@ -284,7 +203,6 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
             idx, d_since, pose, keyframes[-1][2], frame.rgb, last_kf_rgb
         ) if cfg.keyframe.kind in ("monogs", "photoslam", "splatam") else False
         factor = side_factor(d_since, pre_kf, cfg.downsample)
-        stage = stages.get(factor, stages[1])
 
         # Constant-velocity pose prediction.
         base = velocity @ pose
@@ -298,41 +216,21 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
                 jnp.asarray(prev.rgb), jnp.asarray(prev.depth),
                 jnp.asarray(est_w2c[-1]), intr, stride=4,
             )
-            xi = jnp.zeros(6)
-            popt = Adam(lr=cfg.lr_pose * 2)
-            pstate_pose = popt.init(xi)
-            for _ in range(cfg.iters_track):
-                _, gxi = geo_tracker(xi, jnp.asarray(base), pts_w, cols, valid,
-                                     jnp.asarray(frame.rgb), jnp.asarray(frame.depth))
-                upd, pstate_pose = popt.update(gxi, pstate_pose)
-                xi = xi + upd
-                work.add(0, (intr.height // 4) * (intr.width // 4), 0)
+            xi, wsnap = engine.geo_track_frame(
+                base, pts_w, cols, valid,
+                jnp.asarray(frame.rgb), jnp.asarray(frame.depth))
         else:
-            frags = stage.build(g, masked, jnp.asarray(base))
-            xi = jnp.zeros(6)
-            mu = jnp.zeros(6)
-            nu = jnp.zeros(6)
-            ostep = jnp.zeros((), jnp.int32)
-            for _ in range(cfg.iters_track):
-                loss, xi, mu, nu, ostep, g_params = stage.track_step(
-                    g, masked, xi, mu, nu, ostep, jnp.asarray(base),
-                    obs_rgb, obs_depth, frags.idx, frags.count,
-                )
-                alive_now = int(g.num_alive()) - int(jnp.sum(masked & g.alive))
-                work.add(int(frags.total), stage.intr.height * stage.intr.width, alive_now)
+            tres = engine.track_frame(factor, g, pstate, cur_masked(), base,
+                                      obs_rgb, obs_depth)
+            xi, g, pstate, wsnap = tres.xi, tres.g, tres.pstate, tres.work
 
-                if pstate is not None:
-                    pstate = pruning.accumulate(pstate, g_params, prune_cfg)
-                    if int(pstate.iters_left) <= 0:
-                        # Interval boundary: churn, removal, next mask, K adapt.
-                        fresh = stage.build(g, masked, jnp.asarray(lie.se3_exp(xi) @ jnp.asarray(base)))
-                        if pstate.prev_tile_count.shape != fresh.count.shape:
-                            pstate = pstate._replace(prev_tile_count=fresh.count)
-                        pstate, g, _ = pruning.interval_update(pstate, g, fresh.count, prune_cfg)
-                        masked = pstate.masked
-                        frags = fresh
-
-        new_pose = np.asarray(lie.se3_exp(xi) @ jnp.asarray(base))
+        # The one per-frame device->host sync of the tracking phase: pose,
+        # alive count and the work-counter snapshot together.
+        new_pose_dev = lie.se3_exp(xi) @ jnp.asarray(base)
+        new_pose, alive_now, wsnap = engine.fetch(
+            (new_pose_dev, g.num_alive(), wsnap))
+        work.absorb(wsnap)
+        new_pose = np.asarray(new_pose)
         velocity = (new_pose @ np.linalg.inv(pose)).astype(np.float32)
         pose = new_pose
         est_w2c.append(pose.copy())
@@ -343,30 +241,21 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
 
         if is_kf:
             # Mapping at full resolution (paper: keyframes keep R0).
-            rendered = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
+            rendered = np.asarray(engine.fetch(engine.render_eval(g, cur_masked(), pose)))
             g = _densify(g, frame, pose, rendered, intr, cfg, rng)
             map_opt_state = map_opt.init(G.params_of(g))  # fresh moments after insert
             keyframes.append((frame.rgb, frame.depth, pose.copy()))
-            if len(keyframes) > cfg.map_window:
-                window = keyframes[-cfg.map_window:]
-            else:
-                window = keyframes
-            frags_m = None
-            for it in range(cfg.iters_map):
-                kf_rgb, kf_depth, kf_pose = window[it % len(window)]
-                frags_m = stages[1].build(g, masked, jnp.asarray(kf_pose))
-                _, g, map_opt_state = stages[1].map_step(
-                    g, masked, map_opt_state, jnp.asarray(kf_pose),
-                    jnp.asarray(kf_rgb), jnp.asarray(kf_depth),
-                    frags_m.idx, frags_m.count,
-                )
-                work.add(int(frags_m.total), intr.height * intr.width, int(g.num_alive()))
-            img = np.asarray(stages[1].render_eval(g, masked, jnp.asarray(pose)))
-            kf_psnr.append(psnr_np(img, frame.rgb))
+            window = keyframes[-cfg.map_window:]
+            mres = engine.map_frame(g, map_opt_state, cur_masked(), window)
+            g, map_opt_state = mres.g, mres.opt_state
+            img = engine.render_eval(g, cur_masked(), pose)
+            wsnap, alive_now, img = engine.fetch((mres.work, g.num_alive(), img))
+            work.absorb(wsnap)
+            kf_psnr.append(psnr_np(np.asarray(img), frame.rgb))
             last_kf_idx = idx
             last_kf_rgb = frame.rgb
 
-        alive_per_frame.append(int(g.num_alive()))
+        alive_per_frame.append(int(alive_now))
         work.frames += 1
         if verbose and idx % 10 == 0:
             print(f"[{cfg.base_algo}] frame {idx}: kf={is_kf} factor={factor} "
@@ -382,4 +271,6 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
         alive_per_frame=alive_per_frame,
         wall_time_s=time.time() - t0,
         prune_removed=int(pstate.removed) if pstate is not None else 0,
+        dispatches=engine.stats.dispatches,
+        syncs=engine.stats.syncs,
     )

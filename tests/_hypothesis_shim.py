@@ -1,0 +1,103 @@
+"""Optional-`hypothesis` shim so the suite collects and runs offline.
+
+When the real ``hypothesis`` package is importable we re-export it verbatim
+(property-based testing with shrinking, the works).  When it is absent — the
+common case on a network-less container — we fall back to a tiny
+deterministic sampler: each ``@given`` test runs ``max_examples`` times with
+examples drawn from a seeded PRNG, so the same inputs are exercised on every
+run.  No shrinking, no database, but the same test bodies execute and real
+assertion failures still fail the suite.
+
+Usage (test modules):
+
+    from _hypothesis_shim import given, settings, strategies as st
+
+Only the strategy surface this repo actually uses is implemented:
+``integers``, ``floats``, ``lists``, ``data`` and ``Strategy.map``.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class _DataObject:
+        """Stand-in for hypothesis's interactive ``data()`` object."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy, label=None):
+            return strategy.draw(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=10):
+            def draw(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(size)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    def given(*strats: _Strategy):
+        def decorator(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for example in range(n):
+                    # Deterministic per (test, example); independent of order.
+                    rng = random.Random(f"{fn.__name__}:{example}")
+                    drawn = [s.draw(rng) for s in strats]
+                    fn(*args, *drawn, **kwargs)
+
+            # Hide the example parameters from pytest's fixture resolution:
+            # without this, `def test_x(w)` would make pytest look for a
+            # fixture named ``w``.  Dropping __wrapped__ leaves the wrapper's
+            # own (*args, **kwargs) signature visible, which requests none.
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.hypothesis_shim = True
+            return wrapper
+
+        return decorator
+
+    def settings(deadline=None, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        def decorator(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return decorator

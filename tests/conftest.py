@@ -1,9 +1,33 @@
-"""Shared fixtures. NOTE: no XLA device-count flags here — tests run on the
-single real CPU device; multi-device tests spawn subprocesses."""
+"""Shared fixtures and the ``slow`` marker policy.
+
+NOTE: no XLA device-count flags here — tests run on the single real CPU
+device; multi-device tests spawn subprocesses.
+
+Long end-to-end modules (full SLAM runs, multi-device subprocess tests)
+are marked ``slow`` and deselected by default (``addopts = -m "not slow"``
+in pyproject.toml) so ``python -m pytest -q`` finishes in minutes on one
+CPU core.  Run everything with ``--runslow`` or ``-m ""``.
+"""
 
 import jax
 import jax.numpy as jnp
 import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run tests marked slow (full suite; overrides the default "
+             "-m 'not slow' filter)",
+    )
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long end-to-end test, deselected by default"
+    )
+    if config.getoption("--runslow"):
+        config.option.markexpr = ""
 
 from repro.core import gaussians as G
 from repro.core.camera import Camera, Intrinsics, look_at

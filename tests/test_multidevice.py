@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow
+
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -5,6 +5,8 @@ miniaturized)."""
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.core.downsample import DownsampleConfig
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
