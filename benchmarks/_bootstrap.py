@@ -1,0 +1,20 @@
+"""Direct-run sys.path repair, shared by every benchmark entry script.
+
+``python benchmarks/<file>.py`` puts only ``benchmarks/`` itself on
+sys.path, so neither the ``benchmarks`` package nor ``repro`` (under
+``src/``) resolves.  The canonical invocation is
+``PYTHONPATH=src python -m benchmarks.run`` from the repo root; entry
+scripts fall back to
+
+    if __package__ in (None, ""):
+        import _bootstrap  # noqa: F401
+
+(importable precisely because the script's own directory is on sys.path
+in that case) so a direct run works instead of dying on the first import.
+"""
+
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path[:0] = [str(_ROOT), str(_ROOT / "src")]

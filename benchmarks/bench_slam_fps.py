@@ -12,6 +12,9 @@ Run:  PYTHONPATH=src python -m benchmarks.run --only slam_fps
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 import json
 import time
 
@@ -87,6 +90,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_slam.json")
-    ap.add_argument("--full", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", action="store_true")
+    mode.add_argument("--quick", action="store_true",
+                      help="quick mode (the default; spelled out for CI smoke jobs)")
     args = ap.parse_args()
     run(quick=not args.full, out=args.out)

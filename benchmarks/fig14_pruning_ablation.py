@@ -5,6 +5,9 @@ The paper's finding: <=50% pruning keeps quality; >=60% degrades sharply.
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 from benchmarks.common import emit
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig

@@ -14,6 +14,9 @@ constants):
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 import jax
 import jax.numpy as jnp
 

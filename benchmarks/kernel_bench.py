@@ -5,6 +5,9 @@ the wall-clock numbers; the HLO counts are backend-independent)."""
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 import jax
 import jax.numpy as jnp
 

@@ -5,6 +5,9 @@ terms the dry-run recorded, so EXPERIMENTS.md and CI can diff them."""
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 import json
 import os
 

@@ -9,6 +9,9 @@ import argparse
 import sys
 import time
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -19,6 +22,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_slam_fps,
+        bench_wsu,
         fig14_pruning_ablation,
         fig17_breakdown,
         kernel_bench,
@@ -35,6 +39,8 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline_table.run,
         "slam_fps": bench_slam_fps.run,
+        # after slam_fps: wsu amends the BENCH_slam.json it (re)writes
+        "wsu": bench_wsu.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -7,6 +7,9 @@ the reference rasterizer is already vectorized batch compute)."""
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 from benchmarks.common import emit
 from repro.core.downsample import DownsampleConfig
 from repro.core.keyframes import KeyframePolicy

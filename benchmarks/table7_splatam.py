@@ -3,6 +3,9 @@ without RTGS techniques — tracking-rate proxy and peak Gaussian count."""
 
 from __future__ import annotations
 
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
 from benchmarks.common import emit
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig

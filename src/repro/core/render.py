@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.camera import Camera
 from repro.core.gaussians import GaussianField
 from repro.core.projection import ProjectedGaussians, project
+from repro.core.schedule import TileSchedule, build_schedule
 from repro.core.sorting import FragmentLists, TileGrid, build_fragment_lists
 from repro.kernels import ops
 
@@ -23,9 +24,10 @@ from repro.kernels import ops
 class RenderConfig(NamedTuple):
     capacity: int = 128          # fragments per tile (K)
     chunk: int = 16              # kernel chunk size (C)
-    backend: str = "ref"         # ref | pallas | pallas_norb
+    backend: str = "ref"         # ref | pallas | pallas_norb | schedule
     interpret: bool = True       # Pallas interpret mode (CPU container)
     background: tuple = (0.0, 0.0, 0.0)
+    sched_bucket: int = 1        # WSU trip-count bucketing (schedule backend)
 
 
 class RenderOutput(NamedTuple):
@@ -43,15 +45,22 @@ def render(
     grid: TileGrid,
     cfg: RenderConfig = RenderConfig(),
     frags: Optional[FragmentLists] = None,
+    sched: Optional[TileSchedule] = None,
 ) -> RenderOutput:
     proj = project(g, cam)
     if frags is None:
         frags = build_fragment_lists(proj, grid, cfg.capacity)
+    if cfg.backend == "schedule" and sched is None:
+        # No carried schedule (per-iteration caller): derive one from this
+        # frame's counts — the redundancy the engine's carry removes.
+        sched = build_schedule(frags.count, cfg.chunk, bucket=cfg.sched_bucket,
+                               max_trips=cfg.capacity // cfg.chunk)
 
     color_pm, depth_pm, final_t = ops.rasterize(
         proj.mu2d, proj.conic, proj.color, proj.opacity, proj.depth,
         frags.idx, frags.count,
         grid=grid, backend=cfg.backend, chunk=cfg.chunk, interpret=cfg.interpret,
+        sched=sched,
     )
     bg = jnp.asarray(cfg.background, jnp.float32)
     image = color_pm + final_t[..., None] * bg

@@ -124,6 +124,36 @@ def update_fragment_slot(stack: FragmentLists, i, fresh: FragmentLists) -> Fragm
     )
 
 
+def balanced_pair_permutation(count: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Heavy-light fold of tiles into balanced work pairs (WSU pixel-level
+    pairwise scheduling, adapted to tile granularity).
+
+    Tiles are argsorted by fragment count and the heaviest is paired with the
+    lightest, second-heaviest with second-lightest, etc., so every pair's
+    total load approaches the mean.  For an odd tile count a zero-load
+    duplicate of the lightest tile pads the schedule to an even number of
+    slots; the duplicate always lands in slot 1 and does no work (see
+    :mod:`repro.core.schedule`).
+
+    Returns ``(perm, load)``, both ``(S,)`` with ``S = 2 * ceil(T / 2)``:
+    ``perm[2p]``/``perm[2p+1]`` are pair ``p``'s heavy/light tile ids and
+    ``load`` the fragment count each slot actually owes (0 for the pad slot).
+    Pure jnp — safe to rebuild inside ``lax.scan`` bodies.
+    """
+    t = count.shape[0]
+    p = (t + 1) // 2
+    order = jnp.argsort(count).astype(jnp.int32)  # ascending; stable
+    load = count[order].astype(jnp.int32)
+    if 2 * p != t:  # odd: prepend a zero-load duplicate of the lightest tile
+        order = jnp.concatenate([order[:1], order])
+        load = jnp.concatenate([jnp.zeros((1,), jnp.int32), load])
+    light, light_load = order[:p], load[:p]
+    heavy, heavy_load = order[p:][::-1], load[p:][::-1]
+    perm = jnp.stack([heavy, light], axis=1).reshape(-1)
+    slot_load = jnp.stack([heavy_load, light_load], axis=1).reshape(-1)
+    return perm, slot_load
+
+
 def tile_churn_ratio(prev_count: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
     """§4.1 tile-Gaussian intersection change ratio controlling the pruning
     interval K (ratio > 5% -> K/2 else 2K)."""

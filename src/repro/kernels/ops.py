@@ -1,6 +1,6 @@
 """Differentiable rasterization op: Pallas kernels + GMU behind a custom_vjp.
 
-Three backends, selectable per call (all share one blending semantics):
+Four backends, selectable per call (all share one blending semantics):
 
   ref          pure-jnp oracle; gradients via JAX autodiff. Ground truth for
                every kernel test; also the fastest path on this CPU container.
@@ -13,6 +13,11 @@ Three backends, selectable per call (all share one blending semantics):
                recompute incl. exp), then proceeds as above. The HLO-FLOP
                delta vs. ``pallas`` is the paper's 20->4 cycle claim in
                roofline terms.
+  schedule     the ``pallas`` path under a WSU :class:`TileSchedule`
+               (repro/core/schedule.py): one program per balanced tile pair
+               via scalar-prefetch block indexing, chunk loops bounded by
+               actual load, backward replaying the same schedule + slot-order
+               stash. Bit-identical outputs/gradients to ``pallas``.
 """
 
 from __future__ import annotations
@@ -23,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.schedule import TileSchedule, build_schedule
 from repro.core.sorting import TileGrid
 from repro.kernels import gmu, ref
-from repro.kernels.tile_render import tile_render_fwd
-from repro.kernels.tile_render_bp import tile_render_bwd
+from repro.kernels.tile_render import tile_render_fwd, tile_render_fwd_sched
+from repro.kernels.tile_render_bp import tile_render_bwd, tile_render_bwd_sched
 
 _FLOAT0 = jax.dtypes.float0
 
@@ -130,17 +136,103 @@ def _get_pallas_op(grid: TileGrid, chunk: int, interpret: bool, reuse_stash: boo
     return _make_pallas_rasterize(grid, chunk, interpret, reuse_stash)
 
 
+def _make_sched_rasterize(grid: TileGrid, chunk: int, interpret: bool):
+    """Build the custom_vjp WSU-scheduled op for a fixed tile grid.
+
+    Takes the schedule arrays (perm/trips/inv) as explicit operands so the
+    engine can carry a schedule through its ``lax.scan`` and feed it here
+    without retracing; they are index plumbing like ``frag_idx`` (zero
+    cotangent)."""
+
+    @jax.custom_vjp
+    def rasterize(mu2d, conic, color, opacity, depth, frag_idx, count,
+                  perm, trips, inv):
+        out, _ = _fwd(mu2d, conic, color, opacity, depth, frag_idx, count,
+                      perm, trips, inv)
+        return out
+
+    def _fwd(mu2d, conic, color, opacity, depth, frag_idx, count,
+             perm, trips, inv):
+        attrs = _pack_attrs(mu2d, conic, color, opacity, depth, frag_idx)
+        color_s, depth_s, finalt_s, stash_s = tile_render_fwd_sched(
+            attrs, perm, trips, grid, chunk=chunk, interpret=interpret
+        )
+        # Slot order -> tile order (drops the odd-tile pad slot, if any).
+        out = (
+            ref.tiles_to_image(jnp.moveaxis(jnp.take(color_s, inv, axis=0), 1, 2), grid),
+            ref.tiles_to_image(jnp.take(depth_s, inv, axis=0), grid),
+            ref.tiles_to_image(jnp.take(finalt_s, inv, axis=0), grid),
+        )
+        residuals = (attrs, frag_idx, stash_s, perm, trips, inv, mu2d.shape[0])
+        return out, residuals
+
+    def _bwd(residuals, cotangents):
+        attrs, frag_idx, stash_s, perm, trips, inv, n = residuals
+        g_img, g_depth, g_finalt = cotangents
+
+        # Cotangents to slot order; the stash is already slot-ordered (the
+        # backward replays the forward's schedule — no stash shuffle).
+        g_color_s = jnp.take(
+            jnp.moveaxis(ref.image_to_tiles(g_img, grid), 2, 1), perm, axis=0)
+        g_depth_s = jnp.take(ref.image_to_tiles(g_depth, grid), perm, axis=0)
+        g_finalt_s = jnp.take(ref.image_to_tiles(g_finalt, grid), perm, axis=0)
+
+        sched_grads = tile_render_bwd_sched(
+            attrs, perm, trips, stash_s, g_color_s, g_depth_s, g_finalt_s,
+            grid, chunk=chunk, interpret=interpret,
+        )  # (S, 10, K) slot order, pixel-merged (GMU L1)
+
+        # Back to tile order BEFORE the level-2 merge: the merge's float
+        # summation order then matches the unscheduled path exactly.
+        tile_grads = jnp.take(sched_grads, inv, axis=0)  # (T, 10, K)
+        flat = jnp.moveaxis(tile_grads, 1, 2).reshape(-1, 10)
+        ids = frag_idx.reshape(-1)
+        merged = gmu.segment_merge(flat, ids, num_segments=n)  # (N, 10) GMU L2
+
+        g_mu2d = merged[:, 0:2]
+        g_conic = merged[:, 2:5]
+        g_color = merged[:, 5:8]
+        g_opacity = merged[:, 8]
+        g_depth_out = merged[:, 9]
+        zeros = tuple(
+            np.zeros(shape, _FLOAT0)
+            for shape in (frag_idx.shape, (grid.num_tiles,), perm.shape,
+                          trips.shape, inv.shape)
+        )
+        return (g_mu2d, g_conic, g_color, g_opacity, g_depth_out, *zeros)
+
+    rasterize.defvjp(_fwd, _bwd)
+    return rasterize
+
+
+@functools.lru_cache(maxsize=64)
+def _get_sched_op(grid: TileGrid, chunk: int, interpret: bool):
+    return _make_sched_rasterize(grid, chunk, interpret)
+
+
 def rasterize(
     mu2d, conic, color, opacity, depth, frag_idx, count,
     *, grid: TileGrid, backend: str = "ref", chunk: int = 16,
-    interpret: bool = True,
+    interpret: bool = True, sched: TileSchedule | None = None,
 ):
     """Rasterize projected Gaussians into (H,W,3) premultiplied color,
     (H,W) blended depth and (H,W) final transmittance. Differentiable in all
-    float inputs; ``frag_idx``/``count`` are index plumbing (zero cotangent).
+    float inputs; ``frag_idx``/``count`` (and ``sched``'s arrays, for the
+    ``schedule`` backend) are index plumbing (zero cotangent).
+
+    ``backend="schedule"`` runs the WSU-scheduled kernels; pass a carried
+    ``sched`` to reuse the previous iteration's schedule, or leave ``None``
+    to build one from ``count`` on the spot.
     """
     if backend == "ref":
         return _ref_rasterize(mu2d, conic, color, opacity, depth, frag_idx, count, grid)
+    if backend == "schedule":
+        if sched is None:
+            sched = build_schedule(count, chunk,
+                                   max_trips=frag_idx.shape[1] // chunk)
+        op = _get_sched_op(grid, chunk, interpret)
+        return op(mu2d, conic, color, opacity, depth, frag_idx, count,
+                  sched.perm, sched.trips, sched.inv)
     if backend == "pallas":
         op = _get_pallas_op(grid, chunk, interpret, True)
     elif backend == "pallas_norb":

@@ -4,16 +4,23 @@ Maps RTGS's Rendering Engine onto the TPU execution model:
 
 * grid = one program per 16x16 tile; Pallas double-buffers the per-tile
   fragment block HBM->VMEM (the ASIC's "subtile streaming" becomes software
-  pipelining over the grid).
+  pipelining over the grid).  ``tile_render_fwd_sched`` is the
+  **WSU-scheduled** variant: one program per *balanced tile pair*, the pair
+  permutation consumed via scalar prefetch (``PrefetchScalarGridSpec`` index
+  maps pick each slot's attribute block straight from HBM — no host-side
+  gather), and the chunk loop runs ``lax.fori_loop(0, trips)`` with the
+  slot's actual trip count instead of the full capacity loop
+  (see repro/core/schedule.py).
 * alpha computing is vectorized over a fragment *chunk* x 256 pixels
   (the heavy exp stage, the paper's 12-cycle alpha-computing unit);
   the blend chain is an unrolled multiply-add loop over the chunk
   (the 3-cycle blending unit).
-* chunk-level early termination: once every pixel's transmittance is below
-  TERM_EPS — or the chunk is past the tile's fragment count — the whole
-  chunk is skipped via ``pl.when`` (TPU has no per-lane divergence, so the
-  paper's per-pixel termination is hoisted to chunk granularity; semantics
-  stay exact because ``include`` is a prefix property, see ref.py).
+* chunk-level early termination: the chunk loop is a ``fori_loop`` bounded
+  by the tile's *actual* trip count (``ceil(count / chunk)`` — subtile
+  streaming), and a chunk whose pixels are all below TERM_EPS is skipped
+  under ``lax.cond`` (TPU has no per-lane divergence, so the paper's
+  per-pixel termination is hoisted to chunk granularity; semantics stay
+  exact because ``include`` is a prefix property, see ref.py).
 * the **R&B Buffer**: raw fragment alphas are stashed to ``stash`` so the
   backward kernel never re-evaluates the exp (paper: 20 -> 4 cycles). The
   backward replays the blend with multiplies only — no Eq.(5) division.
@@ -29,6 +36,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sorting import TILE, TileGrid
 from repro.kernels.ref import ALPHA_MAX, ALPHA_MIN, NUM_ATTRS, PIX, TERM_EPS
@@ -66,49 +74,64 @@ def _chunk_alphas(attrs_ref, px, py, start, chunk):
     return alpha
 
 
+def _blend_chunk(attrs_ref, alpha, start, chunk, carry):
+    """The Step 3-2 blend chain over one chunk — shared op-for-op by the
+    raster-order and WSU-scheduled kernels so both produce bit-identical
+    accumulators."""
+    acc_r, acc_g, acc_b, acc_d, trans = carry
+    for i in range(chunk):
+        k = start + i
+        a = alpha[i:i + 1, :]                       # (1,256)
+        include = (trans > TERM_EPS).astype(jnp.float32)
+        am = a * include
+        w = trans * am
+        acc_r += w * attrs_ref[0, 5, k]
+        acc_g += w * attrs_ref[0, 6, k]
+        acc_b += w * attrs_ref[0, 7, k]
+        acc_d += w * attrs_ref[0, 9, k]
+        trans = trans * (1.0 - am)
+    return acc_r, acc_g, acc_b, acc_d, trans
+
+
+def _fwd_tile_loop(attrs_ref, stash_ref, row, tile_id, trips, grid_w, chunk):
+    """The per-tile chunk loop shared by both forward kernels: stream
+    ``trips`` chunks (subtile streaming — the loop is bounded by actual
+    load, not capacity), with chunk-level early termination once every
+    pixel's transmittance is saturated.  Identical loop structure in both
+    kernels keeps their compiled float contraction — and therefore their
+    outputs — bit-identical."""
+    px, py = _pixel_coords(tile_id, grid_w)
+    carry0 = (
+        jnp.zeros((1, PIX), jnp.float32), jnp.zeros((1, PIX), jnp.float32),
+        jnp.zeros((1, PIX), jnp.float32), jnp.zeros((1, PIX), jnp.float32),
+        jnp.ones((1, PIX), jnp.float32),
+    )
+
+    def trip_body(c, carry):
+        start = c * chunk
+        trans = carry[4]
+
+        def do_chunk(carry=carry):
+            alpha = _chunk_alphas(attrs_ref, px, py, start, chunk)  # (C,256)
+            stash_ref[row, pl.ds(start, chunk), :] = alpha
+            return _blend_chunk(attrs_ref, alpha, start, chunk, carry)
+
+        return jax.lax.cond(jnp.max(trans) > TERM_EPS, do_chunk,
+                            lambda carry=carry: carry)
+
+    return jax.lax.fori_loop(0, trips, trip_body, carry0)
+
+
 def _fwd_kernel(attrs_ref, count_ref, color_ref, depth_ref, finalt_ref, stash_ref,
                 *, grid_w: int, capacity: int, chunk: int):
     tile_id = pl.program_id(0)
-    px, py = _pixel_coords(tile_id, grid_w)
     count = count_ref[0]
+    trips = (count + chunk - 1) // chunk  # stream only the tile's real load
 
-    acc = [jnp.zeros((1, PIX), jnp.float32) for _ in range(4)]  # r,g,b,depth
-    trans = jnp.ones((1, PIX), jnp.float32)
+    stash_ref[...] = jnp.zeros((1, capacity, PIX), jnp.float32)
+    acc_r, acc_g, acc_b, acc_d, trans = _fwd_tile_loop(
+        attrs_ref, stash_ref, 0, tile_id, trips, grid_w, chunk)
 
-    num_chunks = capacity // chunk
-    carry = (*acc, trans)
-
-    for c in range(num_chunks):
-        start = c * chunk
-        acc_r, acc_g, acc_b, acc_d, trans = carry
-
-        active = (start < count) & (jnp.max(trans) > TERM_EPS)
-
-        def do_chunk(acc_r=acc_r, acc_g=acc_g, acc_b=acc_b, acc_d=acc_d,
-                     trans=trans, start=start):
-            alpha = _chunk_alphas(attrs_ref, px, py, start, chunk)  # (C,256)
-            stash_ref[0, pl.ds(start, chunk), :] = alpha
-            for i in range(chunk):
-                k = start + i
-                a = alpha[i:i + 1, :]                       # (1,256)
-                include = (trans > TERM_EPS).astype(jnp.float32)
-                am = a * include
-                w = trans * am
-                acc_r += w * attrs_ref[0, 5, k]
-                acc_g += w * attrs_ref[0, 6, k]
-                acc_b += w * attrs_ref[0, 7, k]
-                acc_d += w * attrs_ref[0, 9, k]
-                trans = trans * (1.0 - am)
-            return acc_r, acc_g, acc_b, acc_d, trans
-
-        def skip_chunk(acc_r=acc_r, acc_g=acc_g, acc_b=acc_b, acc_d=acc_d,
-                       trans=trans, start=start):
-            stash_ref[0, pl.ds(start, chunk), :] = jnp.zeros((chunk, PIX), jnp.float32)
-            return acc_r, acc_g, acc_b, acc_d, trans
-
-        carry = jax.lax.cond(active, do_chunk, skip_chunk)
-
-    acc_r, acc_g, acc_b, acc_d, trans = carry
     color_ref[0, 0, :] = acc_r[0]
     color_ref[0, 1, :] = acc_g[0]
     color_ref[0, 2, :] = acc_b[0]
@@ -153,3 +176,87 @@ def tile_render_fwd(
         out_shape=out_shapes,
         interpret=interpret,
     )(attrs, count)
+
+
+# ---------------------------------------------------------------------------
+# WSU-scheduled forward: one program per balanced tile pair
+# ---------------------------------------------------------------------------
+
+
+def _sched_fwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref,
+                      color_ref, depth_ref, finalt_ref, stash_ref,
+                      *, grid_w: int, capacity: int, chunk: int):
+    """One program = one balanced pair: slot 2p (heavy) then 2p+1 (light).
+
+    The chunk loop is a ``fori_loop`` over the slot's *actual* trip count
+    (subtile streaming), so a light tile's program retires after its last
+    real chunk instead of ``pl.when``-skipping to capacity.  Chunks the trip
+    bound drops would contribute exactly 0 (padded fragments carry
+    ``present=0`` -> alpha 0), so outputs stay bit-identical to the
+    raster-order kernel."""
+    pair = pl.program_id(0)
+    stash_ref[...] = jnp.zeros((2, capacity, PIX), jnp.float32)
+    for j, attrs_ref in enumerate((attrs_a_ref, attrs_b_ref)):
+        slot = 2 * pair + j
+        tile_id = perm_ref[slot]
+        trips = trips_ref[slot]
+
+        acc_r, acc_g, acc_b, acc_d, trans = _fwd_tile_loop(
+            attrs_ref, stash_ref, j, tile_id, trips, grid_w, chunk)
+        color_ref[j, 0, :] = acc_r[0]
+        color_ref[j, 1, :] = acc_g[0]
+        color_ref[j, 2, :] = acc_b[0]
+        depth_ref[j, :] = acc_d[0]
+        finalt_ref[j, :] = trans[0]
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+def tile_render_fwd_sched(
+    attrs: jnp.ndarray,   # (T, 12, K)
+    perm: jnp.ndarray,    # (S,) int32 schedule slots (S = 2 * ceil(T/2))
+    trips: jnp.ndarray,   # (S,) int32 chunk trips per slot
+    grid: TileGrid,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+):
+    """WSU-scheduled forward.  Outputs are in **slot (schedule) order** —
+    row ``i`` belongs to tile ``perm[i]``; gather with ``sched.inv`` to get
+    tile order.  Returns (color (S,3,256), depth (S,256), final_T (S,256),
+    stash (S,K,256))."""
+    num_tiles, num_attrs, capacity = attrs.shape
+    slots = perm.shape[0]
+    assert num_attrs == NUM_ATTRS and capacity % chunk == 0
+    assert slots % 2 == 0 and slots >= num_tiles
+    num_pairs = slots // 2
+
+    kernel = functools.partial(
+        _sched_fwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, NUM_ATTRS, capacity),
+                         lambda p, perm, trips: (perm[2 * p], 0, 0)),
+            pl.BlockSpec((1, NUM_ATTRS, capacity),
+                         lambda p, perm, trips: (perm[2 * p + 1], 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((2, 3, PIX), lambda p, perm, trips: (p, 0, 0)),
+            pl.BlockSpec((2, PIX), lambda p, perm, trips: (p, 0)),
+            pl.BlockSpec((2, PIX), lambda p, perm, trips: (p, 0)),
+            pl.BlockSpec((2, capacity, PIX), lambda p, perm, trips: (p, 0, 0)),
+        ),
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((slots, 3, PIX), jnp.float32),
+        jax.ShapeDtypeStruct((slots, PIX), jnp.float32),
+        jax.ShapeDtypeStruct((slots, PIX), jnp.float32),
+        jax.ShapeDtypeStruct((slots, capacity, PIX), jnp.float32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(perm, trips, attrs, attrs)

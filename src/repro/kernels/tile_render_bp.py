@@ -27,6 +27,12 @@ The single division by (1 - am_k) above is the analytic d/dam of the
 *downstream* product — it is mathematically required by the chain rule
 (also present in the ASIC's RBC), not an alpha recompute; am <= 0.99 keeps
 it well-conditioned.
+
+``tile_render_bwd_sched`` replays the **same WSU schedule** as the scheduled
+forward (see repro/core/schedule.py): one program per balanced tile pair,
+the permutation consumed via scalar prefetch, chunk loops bounded by the
+slot's actual trip count, and the stash consumed directly in slot order —
+the R&B buffer never has to be un-permuted.
 """
 
 from __future__ import annotations
@@ -36,6 +42,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sorting import TileGrid
 from repro.kernels.ref import ALPHA_MAX, NUM_ATTRS, PIX, TERM_EPS
@@ -44,14 +51,119 @@ from repro.kernels.tile_render import DEFAULT_CHUNK, _pixel_coords
 NUM_GRADS = 10  # mu_x, mu_y, conic_a, conic_b, conic_c, r, g, b, opacity, depth
 
 
+def _pass_a_chunk(attrs_ref, alpha, start, chunk, g_r, g_g, g_b, g_d, carry):
+    """Multiply-only forward replay over one chunk: accumulates total_ws and
+    advances transmittance.  Shared op-for-op by both backward kernels."""
+    trans, total_ws = carry
+    for i in range(chunk):
+        k = start + i
+        a = alpha[i:i + 1, :]
+        include = (trans > TERM_EPS).astype(jnp.float32)
+        am = a * include
+        w = trans * am
+        s = (g_r * attrs_ref[0, 5, k] + g_g * attrs_ref[0, 6, k]
+             + g_b * attrs_ref[0, 7, k] + g_d * attrs_ref[0, 9, k])
+        total_ws += w * s
+        trans = trans * (1.0 - am)
+    return trans, total_ws
+
+
+def _pass_b_chunk(attrs_ref, grads_ref, row, alpha, start, chunk, px, py,
+                  g_r, g_g, g_b, g_d, total_ws, ft_gt, carry):
+    """Fragment gradients over one chunk, merged over the 256 pixels (GMU
+    level 1) into ``grads_ref[row, :, k]``.  Shared by both kernels."""
+    trans, prefix = carry
+    for i in range(chunk):
+        k = start + i
+        a = alpha[i:i + 1, :]
+        include = (trans > TERM_EPS).astype(jnp.float32)
+        am = a * include
+        w = trans * am
+        col_r = attrs_ref[0, 5, k]
+        col_g = attrs_ref[0, 6, k]
+        col_b = attrs_ref[0, 7, k]
+        dep = attrs_ref[0, 9, k]
+        s = g_r * col_r + g_g * col_g + g_b * col_b + g_d * dep
+        prefix += w * s
+        suffix = total_ws - prefix          # sum_{j>k} w_j s_j
+        dam = trans * s - (suffix + ft_gt) / (1.0 - am)
+        da = dam * include                  # (1,256)
+
+        # chain to conic / position / opacity (clip + cutoff masks).
+        o = attrs_ref[0, 8, k]
+        clip = (a < ALPHA_MAX).astype(jnp.float32)
+        dq = da * (-0.5 * a) * clip         # d alpha/d q = -0.5 o G
+        dx = px - attrs_ref[0, 0, k]
+        dy = py - attrs_ref[0, 1, k]
+        ca = attrs_ref[0, 2, k]
+        cb = attrs_ref[0, 3, k]
+        cc = attrs_ref[0, 4, k]
+
+        # GMU level 1: reduce each fragment gradient over 256 pixels.
+        grads_ref[row, 0, k] = jnp.sum(dq * (-2.0) * (ca * dx + cb * dy))
+        grads_ref[row, 1, k] = jnp.sum(dq * (-2.0) * (cb * dx + cc * dy))
+        grads_ref[row, 2, k] = jnp.sum(dq * dx * dx)
+        grads_ref[row, 3, k] = jnp.sum(dq * 2.0 * dx * dy)
+        grads_ref[row, 4, k] = jnp.sum(dq * dy * dy)
+        grads_ref[row, 5, k] = jnp.sum(w * g_r)
+        grads_ref[row, 6, k] = jnp.sum(w * g_g)
+        grads_ref[row, 7, k] = jnp.sum(w * g_b)
+        grads_ref[row, 8, k] = jnp.sum(da * (a / jnp.maximum(o, 1e-12)) * clip)
+        grads_ref[row, 9, k] = jnp.sum(w * g_d)
+
+        trans = trans * (1.0 - am)
+    return trans, prefix
+
+
+def _bwd_tile_loops(attrs_ref, stash_ref, grads_ref, row, tile_id, trips,
+                    g_r, g_g, g_b, g_d, g_t, grid_w, chunk):
+    """Both backward passes for one tile, chunk loops bounded by ``trips``
+    (subtile streaming).  Shared op-for-op by the raster-order and
+    WSU-scheduled kernels so gradients stay bit-identical between them."""
+    px, py = _pixel_coords(tile_id, grid_w)
+    carry0 = (jnp.ones((1, PIX), jnp.float32), jnp.zeros((1, PIX), jnp.float32))
+
+    # ---- pass A: total_ws and final transmittance (multiply-only replay) --
+    def trip_a(c, carry):
+        start = c * chunk
+        trans = carry[0]
+
+        def do_chunk(carry=carry):
+            alpha = stash_ref[row, pl.ds(start, chunk), :]  # (C,256) R&B reuse
+            return _pass_a_chunk(attrs_ref, alpha, start, chunk,
+                                 g_r, g_g, g_b, g_d, carry)
+
+        return jax.lax.cond(jnp.max(trans) > TERM_EPS, do_chunk,
+                            lambda carry=carry: carry)
+
+    final_t, total_ws = jax.lax.fori_loop(0, trips, trip_a, carry0)
+    ft_gt = final_t * g_t  # (1,256)
+
+    # ---- pass B: fragment gradients, merged over pixels (GMU level 1) -----
+    def trip_b(c, carry):
+        start = c * chunk
+        trans = carry[0]
+
+        def do_chunk(carry=carry):
+            alpha = stash_ref[row, pl.ds(start, chunk), :]
+            return _pass_b_chunk(attrs_ref, grads_ref, row, alpha, start,
+                                 chunk, px, py, g_r, g_g, g_b, g_d, total_ws,
+                                 ft_gt, carry)
+
+        return jax.lax.cond(jnp.max(trans) > TERM_EPS, do_chunk,
+                            lambda carry=carry: carry)
+
+    jax.lax.fori_loop(0, trips, trip_b, carry0)
+
+
 def _bwd_kernel(
     attrs_ref, count_ref, stash_ref, g_color_ref, g_depth_ref, g_finalt_ref,
     grads_ref,
     *, grid_w: int, capacity: int, chunk: int,
 ):
     tile_id = pl.program_id(0)
-    px, py = _pixel_coords(tile_id, grid_w)
     count = count_ref[0]
+    trips = (count + chunk - 1) // chunk
 
     g_r = g_color_ref[0, 0, :][None, :]   # (1,256)
     g_g = g_color_ref[0, 1, :][None, :]
@@ -60,92 +172,8 @@ def _bwd_kernel(
     g_t = g_finalt_ref[0, :][None, :]
 
     grads_ref[...] = jnp.zeros((1, NUM_GRADS, capacity), jnp.float32)
-
-    num_chunks = capacity // chunk
-
-    # ---- pass A: total_ws and final transmittance (multiply-only replay) --
-    trans = jnp.ones((1, PIX), jnp.float32)
-    total_ws = jnp.zeros((1, PIX), jnp.float32)
-    carry = (trans, total_ws)
-    for c in range(num_chunks):
-        start = c * chunk
-        trans, total_ws = carry
-
-        active = (start < count) & (jnp.max(trans) > TERM_EPS)
-
-        def do_chunk(trans=trans, total_ws=total_ws, start=start):
-            alpha = stash_ref[0, pl.ds(start, chunk), :]  # (C,256) R&B reuse
-            for i in range(chunk):
-                k = start + i
-                a = alpha[i:i + 1, :]
-                include = (trans > TERM_EPS).astype(jnp.float32)
-                am = a * include
-                w = trans * am
-                s = (g_r * attrs_ref[0, 5, k] + g_g * attrs_ref[0, 6, k]
-                     + g_b * attrs_ref[0, 7, k] + g_d * attrs_ref[0, 9, k])
-                total_ws += w * s
-                trans = trans * (1.0 - am)
-            return trans, total_ws
-
-        carry = jax.lax.cond(active, do_chunk, lambda t=trans, w=total_ws: (t, w))
-
-    final_t, total_ws = carry
-    ft_gt = final_t * g_t  # (1,256)
-
-    # ---- pass B: fragment gradients, merged over pixels (GMU level 1) -----
-    trans = jnp.ones((1, PIX), jnp.float32)
-    prefix = jnp.zeros((1, PIX), jnp.float32)
-    carry = (trans, prefix)
-    for c in range(num_chunks):
-        start = c * chunk
-        trans, prefix = carry
-
-        active = (start < count) & (jnp.max(trans) > TERM_EPS)
-
-        def do_chunk(trans=trans, prefix=prefix, start=start):
-            alpha = stash_ref[0, pl.ds(start, chunk), :]
-            for i in range(chunk):
-                k = start + i
-                a = alpha[i:i + 1, :]
-                include = (trans > TERM_EPS).astype(jnp.float32)
-                am = a * include
-                w = trans * am
-                col_r = attrs_ref[0, 5, k]
-                col_g = attrs_ref[0, 6, k]
-                col_b = attrs_ref[0, 7, k]
-                dep = attrs_ref[0, 9, k]
-                s = g_r * col_r + g_g * col_g + g_b * col_b + g_d * dep
-                prefix += w * s
-                suffix = total_ws - prefix          # sum_{j>k} w_j s_j
-                dam = trans * s - (suffix + ft_gt) / (1.0 - am)
-                da = dam * include                  # (1,256)
-
-                # chain to conic / position / opacity (clip + cutoff masks).
-                o = attrs_ref[0, 8, k]
-                clip = (a < ALPHA_MAX).astype(jnp.float32)
-                dq = da * (-0.5 * a) * clip         # d alpha/d q = -0.5 o G
-                dx = px - attrs_ref[0, 0, k]
-                dy = py - attrs_ref[0, 1, k]
-                ca = attrs_ref[0, 2, k]
-                cb = attrs_ref[0, 3, k]
-                cc = attrs_ref[0, 4, k]
-
-                # GMU level 1: reduce each fragment gradient over 256 pixels.
-                grads_ref[0, 0, k] = jnp.sum(dq * (-2.0) * (ca * dx + cb * dy))
-                grads_ref[0, 1, k] = jnp.sum(dq * (-2.0) * (cb * dx + cc * dy))
-                grads_ref[0, 2, k] = jnp.sum(dq * dx * dx)
-                grads_ref[0, 3, k] = jnp.sum(dq * 2.0 * dx * dy)
-                grads_ref[0, 4, k] = jnp.sum(dq * dy * dy)
-                grads_ref[0, 5, k] = jnp.sum(w * g_r)
-                grads_ref[0, 6, k] = jnp.sum(w * g_g)
-                grads_ref[0, 7, k] = jnp.sum(w * g_b)
-                grads_ref[0, 8, k] = jnp.sum(da * (a / jnp.maximum(o, 1e-12)) * clip)
-                grads_ref[0, 9, k] = jnp.sum(w * g_d)
-
-                trans = trans * (1.0 - am)
-            return trans, prefix
-
-        carry = jax.lax.cond(active, do_chunk, lambda t=trans, p=prefix: (t, p))
+    _bwd_tile_loops(attrs_ref, stash_ref, grads_ref, 0, tile_id, trips,
+                    g_r, g_g, g_b, g_d, g_t, grid_w, chunk)
 
 
 @functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
@@ -182,3 +210,81 @@ def tile_render_bwd(
         out_shape=jax.ShapeDtypeStruct((num_tiles, NUM_GRADS, capacity), jnp.float32),
         interpret=interpret,
     )(attrs, count, stash, g_color, g_depth, g_finalt)
+
+
+# ---------------------------------------------------------------------------
+# WSU-scheduled backward: replays the forward's pair schedule and stash
+# ---------------------------------------------------------------------------
+
+
+def _sched_bwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref, stash_ref,
+                      g_color_ref, g_depth_ref, g_finalt_ref, grads_ref,
+                      *, grid_w: int, capacity: int, chunk: int):
+    pair = pl.program_id(0)
+    grads_ref[...] = jnp.zeros((2, NUM_GRADS, capacity), jnp.float32)
+
+    for j, attrs_ref in enumerate((attrs_a_ref, attrs_b_ref)):
+        slot = 2 * pair + j
+        tile_id = perm_ref[slot]
+        trips = trips_ref[slot]
+
+        g_r = g_color_ref[j, 0, :][None, :]   # (1,256), slot-ordered blocks
+        g_g = g_color_ref[j, 1, :][None, :]
+        g_b = g_color_ref[j, 2, :][None, :]
+        g_d = g_depth_ref[j, :][None, :]
+        g_t = g_finalt_ref[j, :][None, :]
+
+        _bwd_tile_loops(attrs_ref, stash_ref, grads_ref, j, tile_id, trips,
+                        g_r, g_g, g_b, g_d, g_t, grid_w, chunk)
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+def tile_render_bwd_sched(
+    attrs: jnp.ndarray,     # (T, 12, K)
+    perm: jnp.ndarray,      # (S,) int32 schedule slots
+    trips: jnp.ndarray,     # (S,) int32 chunk trips per slot
+    stash: jnp.ndarray,     # (S, K, 256) forward alphas in SLOT order
+    g_color: jnp.ndarray,   # (S, 3, 256) cotangents in SLOT order
+    g_depth: jnp.ndarray,   # (S, 256)
+    g_finalt: jnp.ndarray,  # (S, 256)
+    grid: TileGrid,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Scheduled Rendering BP.  The stash and the pixel cotangents arrive in
+    slot order (the stash straight from ``tile_render_fwd_sched``, the
+    cotangents gathered with ``sched.perm``); the per-fragment gradients
+    return in slot order (S, 10, K) — gather with ``sched.inv`` before the
+    GMU level-2 merge so the merge sees tile order and stays bit-identical
+    to the unscheduled path."""
+    num_tiles, num_attrs, capacity = attrs.shape
+    slots = perm.shape[0]
+    assert num_attrs == NUM_ATTRS and capacity % chunk == 0
+    assert slots % 2 == 0 and slots >= num_tiles
+    num_pairs = slots // 2
+
+    kernel = functools.partial(
+        _sched_bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, NUM_ATTRS, capacity),
+                         lambda p, perm, trips: (perm[2 * p], 0, 0)),
+            pl.BlockSpec((1, NUM_ATTRS, capacity),
+                         lambda p, perm, trips: (perm[2 * p + 1], 0, 0)),
+            pl.BlockSpec((2, capacity, PIX), lambda p, perm, trips: (p, 0, 0)),
+            pl.BlockSpec((2, 3, PIX), lambda p, perm, trips: (p, 0, 0)),
+            pl.BlockSpec((2, PIX), lambda p, perm, trips: (p, 0)),
+            pl.BlockSpec((2, PIX), lambda p, perm, trips: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, NUM_GRADS, capacity),
+                               lambda p, perm, trips: (p, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, NUM_GRADS, capacity), jnp.float32),
+        interpret=interpret,
+    )(perm, trips, attrs, attrs, stash, g_color, g_depth, g_finalt)

@@ -7,7 +7,10 @@ trajectory. SLAM then re-localizes and re-maps from scratch; ATE/PSNR are
 measured exactly as the paper measures them on TUM/Replica.
 
 Scenes are deterministic in (name, seed): 'room0', 'room1', 'hall0' mimic
-the paper's multi-scene evaluation.
+the paper's multi-scene evaluation; 'desk0' is a cluttered close-range
+corner whose per-tile fragment load is heavily skewed (most geometry piles
+into a few tiles while the walls stay sparse) — the workload shape the WSU's
+pairwise scheduling exists for, and what real TUM/Replica frames look like.
 """
 
 from __future__ import annotations
@@ -45,8 +48,54 @@ class SLAMDataset:
         return len(self.frames)
 
 
+def _desk_points(key, n: int):
+    """'desk0': a cluttered corner — ~3/4 of the geometry piles into a few
+    small objects close to the camera while the wall/floor stay sparse.
+    Per-tile fragment counts end up heavily skewed (tail ratio ~2.5-3 vs
+    ~1.7 for the uniform rooms), which is the distribution the WSU's
+    pairwise scheduling is designed to flatten."""
+    ks = jax.random.split(key, 8)
+    n_wall = n // 8
+    n_floor = n // 8
+    n_clutter = n - n_wall - n_floor
+
+    # Sparse back wall (z = 4), dim wash.
+    xy = jax.random.uniform(ks[0], (n_wall, 2), minval=-2.0, maxval=2.0)
+    wall = jnp.stack([xy[:, 0], xy[:, 1] * 0.75, jnp.full((n_wall,), 4.0)], -1)
+    wall_col = jnp.stack([jnp.full((n_wall,), 0.55), 0.55 + 0.1 * xy[:, 1],
+                          jnp.full((n_wall,), 0.6)], -1)
+
+    # Sparse floor (y = 1.5).
+    xz = jax.random.uniform(ks[1], (n_floor, 2), minval=jnp.array([-2.0, 1.0]),
+                            maxval=jnp.array([2.0, 4.0]))
+    floor = jnp.stack([xz[:, 0], jnp.full((n_floor,), 1.5), xz[:, 1]], -1)
+    floor_col = jnp.stack([0.35 + 0.1 * xz[:, 0], jnp.full((n_floor,), 0.3),
+                           jnp.full((n_floor,), 0.25)], -1)
+
+    # Dense clutter: three tight blobs stacked in the lower-left foreground.
+    blob_specs = [
+        (jnp.array([-1.05, 1.15, 2.25]), 0.18, jnp.array([0.85, 0.35, 0.2])),
+        (jnp.array([-0.7, 0.85, 2.5]), 0.16, jnp.array([0.25, 0.7, 0.35])),
+        (jnp.array([-1.15, 0.7, 2.1]), 0.14, jnp.array([0.3, 0.4, 0.85])),
+    ]
+    blobs, blob_cols = [], []
+    per = n_clutter // len(blob_specs)
+    for i, (center, sigma, base) in enumerate(blob_specs):
+        m = n_clutter - per * (len(blob_specs) - 1) if i == 0 else per
+        p = center + sigma * jax.random.normal(jax.random.fold_in(ks[2], i), (m, 3))
+        stripes = (jnp.floor((p[:, 0] + p[:, 1]) * 8) % 2)
+        blobs.append(p)
+        blob_cols.append(base[None, :] * (0.55 + 0.45 * stripes[:, None]))
+
+    pts = jnp.concatenate([wall, floor] + blobs, axis=0)
+    cols = jnp.concatenate([wall_col, floor_col] + blob_cols, axis=0)
+    return pts, jnp.clip(cols, 0.02, 0.98)
+
+
 def _surface_points(key, name: str, n: int):
     """Sample points + colors on a procedural room's surfaces."""
+    if name.startswith("desk"):
+        return _desk_points(key, n)
     ks = jax.random.split(key, 8)
     quarters = n // 4
 

@@ -43,6 +43,7 @@ from repro.core import lie, pruning
 from repro.core.camera import Camera, Intrinsics
 from repro.core.losses import slam_loss
 from repro.core.render import RenderConfig, render
+from repro.core.schedule import build_schedule
 from repro.core.sorting import (
     FragmentLists,
     build_fragment_lists,
@@ -97,11 +98,14 @@ def _pose_adam_zero() -> AdamState:
 def _stage_key(intr: Intrinsics, cfg, factor: int):
     """Everything a _Stage's compiled bundles depend on.  Stages are cached
     module-wide on this key so repeated ``run_slam`` calls (serving many
-    trajectories) reuse XLA executables instead of re-jitting per engine."""
+    trajectories) reuse XLA executables instead of re-jitting per engine.
+    Any new cfg field a bundle closes over MUST be added here, or the cache
+    serves stale executables (tests/test_engine.py guards this)."""
     return (
         intr, factor, cfg.iters_track, cfg.iters_map, cfg.lr_pose, cfg.lr_map,
         cfg.lambda_pho, cfg.frag_capacity, cfg.backend, cfg.prune,
         cfg.map_window, cfg.map_rebuild_stride, cfg.scan_unroll,
+        cfg.sched_bucket,
     )
 
 
@@ -118,7 +122,11 @@ class _Stage:
         self.factor = factor
         self.intr = intr.scaled(factor)
         self.grid = make_tile_grid(self.intr.height, self.intr.width)
-        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend)
+        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend,
+                                 sched_bucket=cfg.sched_bucket)
+        # WSU: carry an execution schedule through the scans next to the
+        # cached fragment lists (rebuilt only on the same boundaries).
+        self.scheduled = cfg.backend == "schedule"
         self.pixels = self.intr.height * self.intr.width
         self.cfg = cfg
 
@@ -143,8 +151,15 @@ class _Stage:
         proj = project(silence(g, masked), Camera(self.intr, w2c))
         return build_fragment_lists(proj, self.grid, self.cfg.frag_capacity)
 
+    def _sched_core(self, frags: FragmentLists):
+        """WSU schedule from the cached fragment counts (pure device math;
+        rebuilt only where ``frags`` is rebuilt)."""
+        return build_schedule(frags.count, self.rcfg.chunk,
+                              bucket=self.cfg.sched_bucket,
+                              max_trips=self.cfg.frag_capacity // self.rcfg.chunk)
+
     def _track_iter_core(self, g, masked, xi, ostate, base_w2c, obs_rgb,
-                         obs_depth, frags):
+                         obs_depth, frags, sched=None):
         """One tracking iteration: render → Eq. 6 loss → pose Adam step.
         Returns the per-Gaussian param grads too (§4.1 reuses them)."""
         g_eff = silence(g, masked)
@@ -152,7 +167,7 @@ class _Stage:
         def loss_fn(xi_, params):
             gg = G.with_params(g_eff, params)
             cam = Camera(self.intr, lie.se3_exp(xi_) @ base_w2c)
-            out = render(gg, cam, self.grid, self.rcfg, frags=frags)
+            out = render(gg, cam, self.grid, self.rcfg, frags=frags, sched=sched)
             return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
                              obs_depth, self.cfg.lambda_pho)
 
@@ -162,12 +177,14 @@ class _Stage:
         upd, ostate = opt.update(g_xi, ostate)
         return loss, xi + upd, ostate, g_params
 
-    def _map_iter_core(self, g, masked, opt_state, w2c, obs_rgb, obs_depth, frags):
+    def _map_iter_core(self, g, masked, opt_state, w2c, obs_rgb, obs_depth,
+                       frags, sched=None):
         g_eff = silence(g, masked)
 
         def loss_fn(params):
             gg = G.with_params(g_eff, params)
-            out = render(gg, Camera(self.intr, w2c), self.grid, self.rcfg, frags=frags)
+            out = render(gg, Camera(self.intr, w2c), self.grid, self.rcfg,
+                         frags=frags, sched=sched)
             return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
                              obs_depth, self.cfg.lambda_pho)
 
@@ -185,10 +202,15 @@ class _Stage:
 
     def _track_scan_noprune(self, g, masked, base_w2c, obs_rgb, obs_depth,
                             frags, work):
+        # WSU previous-iteration reuse: one schedule for the whole phase
+        # (frags is fixed here), computed on device inside this dispatch.
+        sched = self._sched_core(frags) if self.scheduled else None
+
         def body(carry, _):
             xi, ostate, work = carry
             loss, xi, ostate, _ = self._track_iter_core(
-                g, masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags)
+                g, masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags,
+                sched)
             alive_eff = jnp.sum((g.alive & ~masked).astype(jnp.int32))
             work = device_work_add(work, frags.total, self.pixels, alive_eff)
             return (xi, ostate, work), (loss, jnp.asarray(False))
@@ -202,11 +224,17 @@ class _Stage:
     def _track_scan_prune(self, g, pstate, base_w2c, obs_rgb, obs_depth,
                           frags, work):
         prune_cfg = self.cfg.prune
+        sched0 = self._sched_core(frags) if self.scheduled else None
 
         def body(carry, _):
-            xi, ostate, g, pstate, frags, work = carry
+            if self.scheduled:
+                xi, ostate, g, pstate, frags, sched, work = carry
+            else:
+                xi, ostate, g, pstate, frags, work = carry
+                sched = None
             loss, xi, ostate, g_params = self._track_iter_core(
-                g, pstate.masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags)
+                g, pstate.masked, xi, ostate, base_w2c, obs_rgb, obs_depth,
+                frags, sched)
             alive_eff = jnp.sum((g.alive & ~pstate.masked).astype(jnp.int32))
             work = device_work_add(work, frags.total, self.pixels, alive_eff)
             pstate = pruning.accumulate(pstate, g_params, prune_cfg)
@@ -216,12 +244,24 @@ class _Stage:
 
             pstate, g, frags, fired = pruning.cond_interval_update(
                 pstate, g, frags, build_fn, prune_cfg)
+            if self.scheduled:
+                # Re-schedule exactly when the lists rebuilt (same boundary).
+                sched = jax.lax.cond(fired, lambda fr, _s: self._sched_core(fr),
+                                     lambda _fr, s: s, frags, sched)
+                return (xi, ostate, g, pstate, frags, sched, work), (loss, fired)
             return (xi, ostate, g, pstate, frags, work), (loss, fired)
 
-        carry0 = (jnp.zeros(6), _pose_adam_zero(), g, pstate, frags, work)
-        (xi, _, g, pstate, frags, work), (losses, fired) = jax.lax.scan(
-            body, carry0, None, length=self.cfg.iters_track,
-            unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
+        if self.scheduled:
+            carry0 = (jnp.zeros(6), _pose_adam_zero(), g, pstate, frags,
+                      sched0, work)
+            (xi, _, g, pstate, frags, _, work), (losses, fired) = jax.lax.scan(
+                body, carry0, None, length=self.cfg.iters_track,
+                unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
+        else:
+            carry0 = (jnp.zeros(6), _pose_adam_zero(), g, pstate, frags, work)
+            (xi, _, g, pstate, frags, work), (losses, fired) = jax.lax.scan(
+                body, carry0, None, length=self.cfg.iters_track,
+                unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
         return xi, g, pstate, work, losses, fired
 
     def _map_scan(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, work):
@@ -234,28 +274,39 @@ class _Stage:
         stride = self.cfg.map_rebuild_stride
         w_len = kf_w2c.shape[0]
         cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+        # WSU: one schedule per window slot, carried with the cache and
+        # rebuilt on the same stride boundaries.
+        scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
 
         def body(carry, it):
-            g, opt_state, cache, work = carry
+            g, opt_state, cache, scheds, work = carry
             slot = jnp.mod(it, w_len)
             pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0, keepdims=False)
             rgb = jax.lax.dynamic_index_in_dim(kf_rgb, slot, 0, keepdims=False)
             depth = jax.lax.dynamic_index_in_dim(kf_depth, slot, 0, keepdims=False)
             frags = index_fragment_lists(cache, slot)
+            sched = (index_fragment_lists(scheds, slot)
+                     if self.scheduled else None)
             loss, g, opt_state = self._map_iter_core(
-                g, masked, opt_state, pose, rgb, depth, frags)
+                g, masked, opt_state, pose, rgb, depth, frags, sched)
             work = device_work_add(work, frags.total, self.pixels,
                                    jnp.sum(g.alive.astype(jnp.int32)))
 
-            def rebuild(c):
-                return update_fragment_slot(c, slot, self._build_core(g, masked, pose))
+            def rebuild(operand):
+                c, s = operand
+                fresh = self._build_core(g, masked, pose)
+                c = update_fragment_slot(c, slot, fresh)
+                if self.scheduled:
+                    s = update_fragment_slot(s, slot, self._sched_core(fresh))
+                return c, s
 
-            cache = jax.lax.cond(jnp.mod(it + 1, stride) == 0, rebuild,
-                                 lambda c: c, cache)
-            return (g, opt_state, cache, work), loss
+            cache, scheds = jax.lax.cond(
+                jnp.mod(it + 1, stride) == 0, rebuild, lambda o: o,
+                (cache, scheds))
+            return (g, opt_state, cache, scheds, work), loss
 
-        (g, opt_state, _, work), losses = jax.lax.scan(
-            body, (g, opt_state, cache, work),
+        (g, opt_state, _, _, work), losses = jax.lax.scan(
+            body, (g, opt_state, cache, scheds, work),
             jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
             unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
         return g, opt_state, work, losses

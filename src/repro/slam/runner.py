@@ -50,7 +50,9 @@ class SLAMConfig:
     lambda_pho: float = 0.8
     capacity: int = 8192            # Gaussian pool size
     frag_capacity: int = 128        # K fragments per tile
-    backend: str = "ref"            # rasterizer backend (ref is CPU-fast)
+    backend: str = "ref"            # rasterizer backend (ref is CPU-fast;
+                                    # "schedule" = WSU-scheduled Pallas)
+    sched_bucket: int = 1           # WSU trip bucketing (schedule backend)
     prune: Optional[pruning.PruneConfig] = None
     downsample: DownsampleConfig = dataclasses.field(
         default_factory=lambda: DownsampleConfig(enabled=False)

@@ -8,6 +8,8 @@ algorithm: identical poses/PSNR, identical §4.1 interval boundaries,
 identical work counters — with far fewer dispatches and host syncs.
 """
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,7 +18,7 @@ from repro.core import pruning
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.engine import StepEngine
+from repro.slam.engine import StepEngine, _stage_key
 from repro.slam.runner import SLAMConfig, _seed_map, run_slam
 
 
@@ -170,6 +172,41 @@ def test_map_frame_reuses_fragment_lists(scene):
         tuple(int(x) for x in _work_tuple(mr_u.work))
     np.testing.assert_allclose(np.asarray(mr_f.losses), np.asarray(mr_u.losses),
                                rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stage cache: every engine-relevant cfg field must change the cache key
+# ---------------------------------------------------------------------------
+
+def test_stage_key_distinguishes_engine_fields(scene):
+    """The module-level ``_STAGE_CACHE`` reuses compiled bundles across
+    engines keyed on ``_stage_key``.  A cfg field the bundles close over but
+    the key omits would silently serve stale executables — so every
+    engine-relevant field must perturb the key."""
+    intr = scene.intrinsics
+    base = _cfg()
+    variants = dict(
+        iters_track=base.iters_track + 1,
+        iters_map=base.iters_map + 1,
+        lr_pose=base.lr_pose * 2,
+        lr_map=base.lr_map * 2,
+        lambda_pho=base.lambda_pho / 2,
+        frag_capacity=base.frag_capacity * 2,
+        backend="schedule",
+        prune=PruneConfig(k0=3, step_frac=0.1),
+        map_window=base.map_window + 1,
+        map_rebuild_stride=base.map_rebuild_stride + 1,
+        scan_unroll=base.scan_unroll + 1,
+        sched_bucket=base.sched_bucket + 1,
+    )
+    key0 = _stage_key(intr, base, 1)
+    for name, value in variants.items():
+        alt = dataclasses.replace(base, **{name: value})
+        assert _stage_key(intr, alt, 1) != key0, (
+            f"_stage_key ignores engine-relevant field {name!r}")
+    # the downsample factor and the intrinsics are part of the key too
+    assert _stage_key(intr, base, 2) != key0
+    assert _stage_key(intr._replace(fx=intr.fx + 1.0), base, 1) != key0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,259 @@
+"""WSU schedule validation: pairing invariants + bit-exactness guarantees.
+
+The contract under test: a :class:`TileSchedule` changes only the *execution
+order* of the rasterizer — any permutation/pairing of tiles, any trip
+bucketing, odd tile counts, empty tiles and overflowed tiles must produce
+**bit-identical** forward outputs and backward gradients versus the
+raster-order Pallas kernels (and match the ref.py oracle to float tolerance).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, strategies as st
+
+from repro.core.schedule import (
+    TileSchedule,
+    build_schedule,
+    pair_loads,
+    schedule_from_order,
+)
+from repro.core.sorting import balanced_pair_permutation, make_tile_grid
+from repro.kernels import ops, ref
+from repro.kernels.tile_render import tile_render_fwd, tile_render_fwd_sched
+from repro.kernels.tile_render_bp import tile_render_bwd, tile_render_bwd_sched
+from test_kernels import _random_attrs
+
+
+def _skewed_attrs(key, grid, cap, *, empty=True, overflow=True):
+    """Random packed attrs with forced empty + overflowed tiles."""
+    attrs, count = _random_attrs(key, grid.num_tiles, cap, grid)
+    if empty:
+        count = count.at[0].set(0)
+    if overflow and grid.num_tiles > 1:
+        count = count.at[1].set(cap)
+    attrs = attrs.at[:, 10].set(
+        (jnp.arange(cap)[None, :] < count[:, None]).astype(jnp.float32))
+    return attrs, count
+
+
+# ---------------------------------------------------------------------------
+# schedule construction invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t", [1, 2, 3, 9, 16])
+def test_build_schedule_invariants(t):
+    rng = np.random.default_rng(t)
+    count = jnp.asarray(rng.integers(0, 64, size=t), jnp.int32)
+    chunk = 8
+    sched = build_schedule(count, chunk, max_trips=64 // chunk)
+
+    s = sched.perm.shape[0]
+    assert s == 2 * ((t + 1) // 2)
+    # every tile appears, and inv resolves each tile to a slot holding it
+    assert set(np.asarray(sched.perm).tolist()) == set(range(t))
+    np.testing.assert_array_equal(
+        np.asarray(sched.perm)[np.asarray(sched.inv)], np.arange(t))
+    # slot loads are the tile counts (0 for the pad slot), trips = ceil(load/chunk)
+    perm, load = np.asarray(sched.perm), np.asarray(sched.load)
+    np.testing.assert_array_equal(np.asarray(sched.trips), -(-load // chunk))
+    cnt = np.asarray(count)
+    for i in range(s):
+        assert load[i] in (0, cnt[perm[i]])
+    # the working slots account every fragment exactly once
+    assert load.sum() == cnt.sum()
+    # pairing balances: pair tail ratio never exceeds the tile tail ratio
+    pl_ = np.asarray(pair_loads(sched))
+    if cnt.sum() > 0:
+        tile_tail = cnt.max() / max(cnt.mean(), 1e-9)
+        pair_tail = pl_.max() / max(pl_.mean(), 1e-9)
+        assert pair_tail <= tile_tail + 1e-6
+
+
+def test_heavy_light_fold_pairs_extremes():
+    count = jnp.asarray([100, 0, 50, 10], jnp.int32)
+    perm, load = balanced_pair_permutation(count)
+    perm = np.asarray(perm)
+    # heaviest tile shares its pair with the lightest
+    assert perm[0] == 0 and perm[1] == 1
+    assert perm[2] == 2 and perm[3] == 3
+    np.testing.assert_array_equal(np.asarray(load), [100, 0, 50, 10])
+
+
+def test_bucket_rounding_clamped():
+    count = jnp.asarray([1, 17, 64, 33], jnp.int32)
+    sched = build_schedule(count, 8, bucket=4, max_trips=8)
+    trips = np.asarray(sched.trips)
+    assert all(tr % 4 == 0 or tr == 8 for tr in trips[np.asarray(sched.load) > 0])
+    assert trips.max() <= 8
+    # zero-load slots must stay at zero trips, not get bucketed up
+    assert all(tr == 0 for tr in trips[np.asarray(sched.load) == 0])
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: scheduled kernels vs raster-order kernels vs ref oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hw,cap,chunk", [
+    ((48, 48), 32, 8),    # 9 tiles: odd count exercises the pad slot
+    ((64, 64), 64, 16),
+])
+def test_scheduled_forward_bit_exact(hw, cap, chunk):
+    grid = make_tile_grid(*hw)
+    attrs, count = _skewed_attrs(jax.random.PRNGKey(3), grid, cap)
+    sched = build_schedule(count, chunk, max_trips=cap // chunk)
+    inv = np.asarray(sched.inv)
+
+    c_u, d_u, t_u, st_u = tile_render_fwd(attrs, count, grid, chunk=chunk)
+    c_s, d_s, t_s, st_s = tile_render_fwd_sched(
+        attrs, sched.perm, sched.trips, grid, chunk=chunk)
+
+    np.testing.assert_array_equal(np.asarray(c_s)[inv], np.asarray(c_u))
+    np.testing.assert_array_equal(np.asarray(d_s)[inv], np.asarray(d_u))
+    np.testing.assert_array_equal(np.asarray(t_s)[inv], np.asarray(t_u))
+    np.testing.assert_array_equal(np.asarray(st_s)[inv], np.asarray(st_u))
+    # and the oracle agrees to float tolerance
+    rc, rd, rt = ref.rasterize_tiles(attrs, grid)
+    np.testing.assert_allclose(
+        np.asarray(jnp.moveaxis(c_s[sched.inv], 1, 2)), np.asarray(rc),
+        atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(t_s[sched.inv]), np.asarray(rt),
+                               atol=2e-5, rtol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 10_000))
+def test_any_pairing_is_bit_exact(seed):
+    """Property: rendered color/depth/final-T AND backward gradients are
+    bit-identical under an arbitrary tile permutation/pairing, including
+    empty and overflowed tiles."""
+    grid = make_tile_grid(64, 64)  # 16 tiles (even: any perm is a schedule)
+    cap = chunk = 8
+    rng = np.random.default_rng(seed)
+    count = jnp.asarray(rng.integers(0, cap + 1, size=grid.num_tiles), jnp.int32)
+    count = count.at[0].set(0).at[1].set(cap)  # empty + overflow
+    attrs, _ = _random_attrs(jax.random.PRNGKey(seed % 97), grid.num_tiles,
+                             cap, grid)
+    attrs = attrs.at[:, 10].set(
+        (jnp.arange(cap)[None, :] < count[:, None]).astype(jnp.float32))
+
+    perm = jnp.asarray(rng.permutation(grid.num_tiles), jnp.int32)
+    sched = schedule_from_order(perm, count, chunk)
+    inv = np.asarray(sched.inv)
+    permn = np.asarray(sched.perm)
+
+    c_u, d_u, t_u, st_u = tile_render_fwd(attrs, count, grid, chunk=chunk)
+    c_s, d_s, t_s, st_s = tile_render_fwd_sched(
+        attrs, sched.perm, sched.trips, grid, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(c_s)[inv], np.asarray(c_u))
+    np.testing.assert_array_equal(np.asarray(d_s)[inv], np.asarray(d_u))
+    np.testing.assert_array_equal(np.asarray(t_s)[inv], np.asarray(t_u))
+
+    keys = jax.random.split(jax.random.PRNGKey(seed % 89), 3)
+    gc = jax.random.normal(keys[0], (grid.num_tiles, 3, ref.PIX))
+    gd = jax.random.normal(keys[1], (grid.num_tiles, ref.PIX))
+    gt = jax.random.normal(keys[2], (grid.num_tiles, ref.PIX))
+    gr_u = tile_render_bwd(attrs, count, st_u, gc, gd, gt, grid, chunk=chunk)
+    gr_s = tile_render_bwd_sched(
+        attrs, sched.perm, sched.trips, st_s,
+        gc[permn], gd[permn], gt[permn], grid, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(gr_s)[inv], np.asarray(gr_u))
+
+
+def test_ops_schedule_backend_bit_exact(tiny_scene):
+    """End-to-end custom_vjp parity: the ``schedule`` backend must return the
+    same images and the same per-Gaussian gradients (through the GMU merge)
+    as the ``pallas`` backend, bit for bit — and match the ref oracle."""
+    s = tiny_scene
+    proj, frags, grid = s["proj"], s["frags"], s["grid"]
+    target = jax.random.uniform(jax.random.PRNGKey(3), (grid.height, grid.width, 3))
+
+    def loss(mu2d, conic, color, opacity, depth, backend):
+        img, dep, ft = ops.rasterize(
+            mu2d, conic, color, opacity, depth, frags.idx, frags.count,
+            grid=grid, backend=backend,
+        )
+        return jnp.mean((img - target) ** 2) + 0.1 * jnp.mean(dep) + 0.05 * jnp.mean(ft)
+
+    args = (proj.mu2d, proj.conic, proj.color, proj.opacity, proj.depth)
+    out_p = ops.rasterize(*args, frags.idx, frags.count, grid=grid, backend="pallas")
+    out_s = ops.rasterize(*args, frags.idx, frags.count, grid=grid, backend="schedule")
+    for a, b, name in zip(out_p, out_s, ["img", "depth", "finalt"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+    g_pal = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(*args, "pallas")
+    g_sch = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(*args, "schedule")
+    for a, b, name in zip(g_pal, g_sch, ["mu2d", "conic", "color", "opacity", "depth"]):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a),
+                                      err_msg=f"grad mismatch for {name}")
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2, 3, 4))(*args, "ref")
+    for a, b, name in zip(g_ref, g_sch, ["mu2d", "conic", "color", "opacity", "depth"]):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-10
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), atol=max(3e-6, 3e-5 * scale),
+            err_msg=f"ref-oracle grad mismatch for {name}")
+
+
+def test_explicit_sched_matches_autobuilt(tiny_scene):
+    """Passing a carried schedule (the engine's path) must equal letting the
+    op build one from ``count`` (the per-iteration path)."""
+    s = tiny_scene
+    proj, frags, grid = s["proj"], s["frags"], s["grid"]
+    args = (proj.mu2d, proj.conic, proj.color, proj.opacity, proj.depth)
+    sched = build_schedule(frags.count, 16, max_trips=frags.idx.shape[1] // 16)
+    out_a = ops.rasterize(*args, frags.idx, frags.count, grid=grid,
+                          backend="schedule")
+    out_b = ops.rasterize(*args, frags.idx, frags.count, grid=grid,
+                          backend="schedule", sched=sched)
+    for a, b in zip(out_a, out_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# engine integration: schedule carried through the fused scan bundles
+# ---------------------------------------------------------------------------
+
+def test_engine_schedule_mode_tracks_bit_exact():
+    """Fused tracking with ``backend='schedule'`` (schedule in the scan
+    carry, rebuilt under the §4.1 boundary cond) must match the ``pallas``
+    engine bit-for-bit, with the same dispatch/sync profile."""
+    import jax as _jax
+
+    from repro.core import pruning
+    from repro.core.keyframes import KeyframePolicy
+    from repro.core.pruning import PruneConfig
+    from repro.slam.datasets import make_dataset
+    from repro.slam.engine import StepEngine
+    from repro.slam.runner import SLAMConfig, _seed_map
+
+    scene = make_dataset("room0", num_frames=2, height=64, width=64,
+                         num_gaussians=300, frag_capacity=32)
+    results = {}
+    for backend in ("pallas", "schedule"):
+        cfg = SLAMConfig(iters_track=3, iters_map=4, capacity=768,
+                         frag_capacity=32, backend=backend,
+                         prune=PruneConfig(k0=2, step_frac=0.1),
+                         keyframe=KeyframePolicy(kind="monogs", interval=3))
+        g = _seed_map(scene, cfg)
+        eng = StepEngine(scene.intrinsics, cfg)
+        ps = pruning.init_state(g, eng.stage(1).grid.num_tiles, cfg.prune)
+        masked = jnp.zeros((cfg.capacity,), bool)
+        tr = eng.track_frame(
+            1, _jax.tree.map(jnp.array, g), _jax.tree.map(jnp.array, ps),
+            masked, jnp.asarray(scene.frames[1].w2c_gt),
+            jnp.asarray(scene.frames[1].rgb),
+            jnp.asarray(scene.frames[1].depth))
+        results[backend] = (np.asarray(tr.xi), np.asarray(tr.losses),
+                            np.asarray(tr.fired), eng.stats.dispatches,
+                            eng.stats.syncs)
+
+    xi_p, loss_p, fired_p, disp_p, sync_p = results["pallas"]
+    xi_s, loss_s, fired_s, disp_s, sync_s = results["schedule"]
+    np.testing.assert_array_equal(xi_s, xi_p)
+    np.testing.assert_array_equal(loss_s, loss_p)
+    np.testing.assert_array_equal(fired_s, fired_p)
+    assert fired_p.any()          # a boundary (and thus a re-schedule) fired
+    assert disp_s == disp_p == 2  # build + ONE scan; scheduling adds nothing
+    assert sync_s == sync_p == 0
