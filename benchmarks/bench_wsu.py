@@ -51,7 +51,7 @@ def _imbalance_telemetry(ds, cfg):
     g = _seed_map(ds, cfg)
     engine = StepEngine(ds.intrinsics, cfg)
     masked = jnp.zeros((cfg.capacity,), bool)
-    chunk = engine.stage(1).rcfg.chunk
+    chunk = engine.stage(1).plan.chunk
     num_tiles = engine.stage(1).grid.num_tiles
     provisioned = 2 * cfg.frag_capacity  # pre-WSU load per pair program
     tile_stats, pair_stats = [], []
@@ -139,6 +139,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_slam.json")
-    ap.add_argument("--full", action="store_true")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", action="store_true")
+    mode.add_argument("--quick", action="store_true",
+                      help="quick mode (the default; spelled out for CI smoke jobs)")
     args = ap.parse_args()
     run(quick=not args.full, out=args.out)

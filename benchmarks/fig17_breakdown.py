@@ -51,12 +51,17 @@ def rb_buffer_flops(scene):
     frags = build_fragment_lists(proj, grid, 96)
     target = jnp.asarray(f0.rgb)
 
+    from repro.core.raster_api import RasterInputs, RasterPlan
+
     results = {}
     for backend in ("pallas", "pallas_norb"):
-        def loss(mu2d, conic, color, opacity, depth):
+        plan = RasterPlan(grid=grid, backend=backend, capacity=96)
+
+        def loss(mu2d, conic, color, opacity, depth, plan=plan):
             img, dep, ft = ops.rasterize(
-                mu2d, conic, color, opacity, depth, frags.idx, frags.count,
-                grid=grid, backend=backend,
+                RasterInputs(mu2d=mu2d, conic=conic, color=color,
+                             opacity=opacity, depth=depth, frags=frags),
+                plan,
             )
             return jnp.mean((img - target) ** 2)
 

@@ -13,6 +13,7 @@ import argparse
 from repro.core.downsample import DownsampleConfig
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
+from repro.core.raster_api import registered_backends
 from repro.slam.datasets import make_dataset
 from repro.slam.runner import SLAMConfig, run_slam
 
@@ -21,6 +22,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=14)
     ap.add_argument("--scene", default="room0")
+    ap.add_argument("--backend", default="ref", choices=registered_backends(),
+                    help="rasterizer backend (any registered RasterAPI "
+                         "backend; 'ref' is fastest on CPU, 'schedule' runs "
+                         "the WSU-scheduled Pallas kernels)")
     ap.add_argument("--unfused", action="store_true",
                     help="per-iteration loop instead of the scan-fused "
                          "engine (the seed's dispatch pattern)")
@@ -37,6 +42,7 @@ def main():
             keyframe=KeyframePolicy(kind="monogs", interval=4),
             iters_track=10, iters_map=16,
             capacity=4096, frag_capacity=96,
+            backend=args.backend,
             prune=PruneConfig(k0=5, step_frac=0.08) if variant == "rtgs" else None,
             downsample=DownsampleConfig(enabled=(variant == "rtgs")),
             fused=not args.unfused,

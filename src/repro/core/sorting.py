@@ -106,14 +106,6 @@ def stack_fragment_lists(lists: list["FragmentLists"]) -> FragmentLists:
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *lists)
 
 
-def index_fragment_lists(stack: FragmentLists, i) -> FragmentLists:
-    """Select window slot ``i`` (a traced () int) from a stacked cache."""
-    return jax.tree.map(
-        lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False),
-        stack,
-    )
-
-
 def update_fragment_slot(stack: FragmentLists, i, fresh: FragmentLists) -> FragmentLists:
     """Write a freshly built list into window slot ``i`` of a stacked cache
     (the Obs. 6 stride-rebuild inside the mapping scan)."""

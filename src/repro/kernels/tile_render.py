@@ -123,8 +123,10 @@ def _fwd_tile_loop(attrs_ref, stash_ref, row, tile_id, trips, grid_w, chunk):
 
 
 def _fwd_kernel(attrs_ref, count_ref, color_ref, depth_ref, finalt_ref, stash_ref,
-                *, grid_w: int, capacity: int, chunk: int):
-    tile_id = pl.program_id(0)
+                *, grid_w: int, capacity: int, chunk: int, tiles: int):
+    # Stacked multi-view grids run B*T programs; the pixel coords of program
+    # p belong to tile p mod T of its view (identity when unbatched).
+    tile_id = pl.program_id(0) % tiles
     count = count_ref[0]
     trips = (count + chunk - 1) // chunk  # stream only the tile's real load
 
@@ -139,20 +141,30 @@ def _fwd_kernel(attrs_ref, count_ref, color_ref, depth_ref, finalt_ref, stash_re
     finalt_ref[0, :] = trans[0]
 
 
-@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("grid", "chunk", "interpret", "tiles_per_view"))
 def tile_render_fwd(
-    attrs: jnp.ndarray,   # (T, 12, K)
+    attrs: jnp.ndarray,   # (T, 12, K) — or (B*T, 12, K) stacked views
     count: jnp.ndarray,   # (T,) int32
     grid: TileGrid,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool = True,
+    tiles_per_view: int | None = None,
 ):
-    """Returns (color (T,3,256), depth (T,256), final_T (T,256), stash (T,K,256))."""
+    """Returns (color (T,3,256), depth (T,256), final_T (T,256), stash (T,K,256)).
+
+    ``tiles_per_view`` enables **stacked-grid multi-view batching**: pass
+    attrs/count for ``B`` views concatenated along the tile axis and the
+    per-view tile count ``T``; the grid runs ``B*T`` programs whose per-tile
+    computation is bit-identical to ``B`` separate calls."""
     num_tiles, num_attrs, capacity = attrs.shape
     assert num_attrs == NUM_ATTRS and capacity % chunk == 0
+    tiles = tiles_per_view or num_tiles
+    assert num_tiles % tiles == 0, (num_tiles, tiles)
 
     kernel = functools.partial(
-        _fwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+        _fwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk,
+        tiles=tiles,
     )
     out_shapes = (
         jax.ShapeDtypeStruct((num_tiles, 3, PIX), jnp.float32),
@@ -185,7 +197,7 @@ def tile_render_fwd(
 
 def _sched_fwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref,
                       color_ref, depth_ref, finalt_ref, stash_ref,
-                      *, grid_w: int, capacity: int, chunk: int):
+                      *, grid_w: int, capacity: int, chunk: int, tiles: int):
     """One program = one balanced pair: slot 2p (heavy) then 2p+1 (light).
 
     The chunk loop is a ``fori_loop`` over the slot's *actual* trip count
@@ -198,7 +210,9 @@ def _sched_fwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref,
     stash_ref[...] = jnp.zeros((2, capacity, PIX), jnp.float32)
     for j, attrs_ref in enumerate((attrs_a_ref, attrs_b_ref)):
         slot = 2 * pair + j
-        tile_id = perm_ref[slot]
+        # Stacked schedules hold global rows (view*T + tile); the in-view
+        # tile id drives the pixel coords (identity when unbatched).
+        tile_id = perm_ref[slot] % tiles
         trips = trips_ref[slot]
 
         acc_r, acc_g, acc_b, acc_d, trans = _fwd_tile_loop(
@@ -210,27 +224,36 @@ def _sched_fwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref,
         finalt_ref[j, :] = trans[0]
 
 
-@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("grid", "chunk", "interpret", "tiles_per_view"))
 def tile_render_fwd_sched(
-    attrs: jnp.ndarray,   # (T, 12, K)
+    attrs: jnp.ndarray,   # (T, 12, K) — or (B*T, 12, K) stacked views
     perm: jnp.ndarray,    # (S,) int32 schedule slots (S = 2 * ceil(T/2))
     trips: jnp.ndarray,   # (S,) int32 chunk trips per slot
     grid: TileGrid,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool = True,
+    tiles_per_view: int | None = None,
 ):
     """WSU-scheduled forward.  Outputs are in **slot (schedule) order** —
     row ``i`` belongs to tile ``perm[i]``; gather with ``sched.inv`` to get
     tile order.  Returns (color (S,3,256), depth (S,256), final_T (S,256),
-    stash (S,K,256))."""
+    stash (S,K,256)).
+
+    For stacked multi-view batching pass per-view schedules concatenated
+    with their perm entries offset by ``view * tiles_per_view`` (global
+    attr rows); per-pair computation is bit-identical to separate calls."""
     num_tiles, num_attrs, capacity = attrs.shape
     slots = perm.shape[0]
     assert num_attrs == NUM_ATTRS and capacity % chunk == 0
     assert slots % 2 == 0 and slots >= num_tiles
+    tiles = tiles_per_view or num_tiles
+    assert num_tiles % tiles == 0, (num_tiles, tiles)
     num_pairs = slots // 2
 
     kernel = functools.partial(
-        _sched_fwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+        _sched_fwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk,
+        tiles=tiles,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -159,9 +159,11 @@ def _bwd_tile_loops(attrs_ref, stash_ref, grads_ref, row, tile_id, trips,
 def _bwd_kernel(
     attrs_ref, count_ref, stash_ref, g_color_ref, g_depth_ref, g_finalt_ref,
     grads_ref,
-    *, grid_w: int, capacity: int, chunk: int,
+    *, grid_w: int, capacity: int, chunk: int, tiles: int,
 ):
-    tile_id = pl.program_id(0)
+    # Stacked multi-view grids run B*T programs; pixel coords use the
+    # in-view tile id (identity when unbatched).
+    tile_id = pl.program_id(0) % tiles
     count = count_ref[0]
     trips = (count + chunk - 1) // chunk
 
@@ -176,9 +178,10 @@ def _bwd_kernel(
                     g_r, g_g, g_b, g_d, g_t, grid_w, chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("grid", "chunk", "interpret", "tiles_per_view"))
 def tile_render_bwd(
-    attrs: jnp.ndarray,    # (T, 12, K)
+    attrs: jnp.ndarray,    # (T, 12, K) — or (B*T, 12, K) stacked views
     count: jnp.ndarray,    # (T,)
     stash: jnp.ndarray,    # (T, K, 256) forward alphas (the R&B buffer)
     g_color: jnp.ndarray,  # (T, 3, 256)
@@ -187,13 +190,20 @@ def tile_render_bwd(
     grid: TileGrid,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool = True,
+    tiles_per_view: int | None = None,
 ) -> jnp.ndarray:
-    """Returns per-(tile, fragment) merged gradients (T, 10, K)."""
+    """Returns per-(tile, fragment) merged gradients (T, 10, K).
+
+    ``tiles_per_view`` = stacked-grid multi-view batching, see
+    :func:`repro.kernels.tile_render.tile_render_fwd`."""
     num_tiles, num_attrs, capacity = attrs.shape
     assert num_attrs == NUM_ATTRS and capacity % chunk == 0
+    tiles = tiles_per_view or num_tiles
+    assert num_tiles % tiles == 0, (num_tiles, tiles)
 
     kernel = functools.partial(
-        _bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+        _bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk,
+        tiles=tiles,
     )
     return pl.pallas_call(
         kernel,
@@ -219,13 +229,15 @@ def tile_render_bwd(
 
 def _sched_bwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref, stash_ref,
                       g_color_ref, g_depth_ref, g_finalt_ref, grads_ref,
-                      *, grid_w: int, capacity: int, chunk: int):
+                      *, grid_w: int, capacity: int, chunk: int, tiles: int):
     pair = pl.program_id(0)
     grads_ref[...] = jnp.zeros((2, NUM_GRADS, capacity), jnp.float32)
 
     for j, attrs_ref in enumerate((attrs_a_ref, attrs_b_ref)):
         slot = 2 * pair + j
-        tile_id = perm_ref[slot]
+        # Stacked schedules hold global rows (view*T + tile); pixel coords
+        # use the in-view tile id (identity when unbatched).
+        tile_id = perm_ref[slot] % tiles
         trips = trips_ref[slot]
 
         g_r = g_color_ref[j, 0, :][None, :]   # (1,256), slot-ordered blocks
@@ -238,9 +250,10 @@ def _sched_bwd_kernel(perm_ref, trips_ref, attrs_a_ref, attrs_b_ref, stash_ref,
                         g_r, g_g, g_b, g_d, g_t, grid_w, chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("grid", "chunk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("grid", "chunk", "interpret", "tiles_per_view"))
 def tile_render_bwd_sched(
-    attrs: jnp.ndarray,     # (T, 12, K)
+    attrs: jnp.ndarray,     # (T, 12, K) — or (B*T, 12, K) stacked views
     perm: jnp.ndarray,      # (S,) int32 schedule slots
     trips: jnp.ndarray,     # (S,) int32 chunk trips per slot
     stash: jnp.ndarray,     # (S, K, 256) forward alphas in SLOT order
@@ -250,6 +263,7 @@ def tile_render_bwd_sched(
     grid: TileGrid,
     chunk: int = DEFAULT_CHUNK,
     interpret: bool = True,
+    tiles_per_view: int | None = None,
 ) -> jnp.ndarray:
     """Scheduled Rendering BP.  The stash and the pixel cotangents arrive in
     slot order (the stash straight from ``tile_render_fwd_sched``, the
@@ -261,10 +275,13 @@ def tile_render_bwd_sched(
     slots = perm.shape[0]
     assert num_attrs == NUM_ATTRS and capacity % chunk == 0
     assert slots % 2 == 0 and slots >= num_tiles
+    tiles = tiles_per_view or num_tiles
+    assert num_tiles % tiles == 0, (num_tiles, tiles)
     num_pairs = slots // 2
 
     kernel = functools.partial(
-        _sched_bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk
+        _sched_bwd_kernel, grid_w=grid.grid_w, capacity=capacity, chunk=chunk,
+        tiles=tiles,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

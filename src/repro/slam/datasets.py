@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core import gaussians as G
 from repro.core.camera import Camera, Intrinsics, look_at
-from repro.core.render import RenderConfig, render
+from repro.core.raster_api import RasterPlan
+from repro.core.render import render
 from repro.core.sorting import make_tile_grid
 
 
@@ -171,11 +172,11 @@ def make_dataset(
     f = 0.9 * width
     intr = Intrinsics(fx=f, fy=f, cx=width / 2, cy=height / 2, width=width, height=height)
     grid = make_tile_grid(height, width)
-    cfg = RenderConfig(capacity=frag_capacity, backend="ref")
+    plan = RasterPlan(grid=grid, backend="ref", capacity=frag_capacity)
 
     @jax.jit
     def render_frame(w2c):
-        out = render(gt, Camera(intr, w2c), grid, cfg)
+        out = render(gt, Camera(intr, w2c), plan)
         depth = jnp.where(out.alpha > 0.5, out.depth / jnp.maximum(out.alpha, 1e-6), 0.0)
         return out.image, depth
 

@@ -15,6 +15,12 @@ through the scan.  Pruning interval boundaries fire under ``lax.cond``
 scan on boundaries/strides (Obs. 6 reuse), and work counters stay device
 resident — fetched once per frame, not per iteration.
 
+Mapping optimizes the **whole keyframe window jointly**: every iteration
+renders all window views as ONE batched multi-view dispatch (RasterAPI v2
+stacked-grid batching, bit-identical to a per-view loop) and steps Adam on
+the mean window loss; the post-mapping eval render rides inside the same
+scan dispatch.
+
 Layering:
 
   host (runner.py)      keyframe policy, densify/seed, constant velocity —
@@ -42,13 +48,14 @@ from repro.core import gaussians as G
 from repro.core import lie, pruning
 from repro.core.camera import Camera, Intrinsics
 from repro.core.losses import slam_loss
-from repro.core.render import RenderConfig, render
+from repro.core.raster_api import RasterPlan, static_fingerprint
+from repro.core.render import render
 from repro.core.schedule import build_schedule
 from repro.core.sorting import (
     FragmentLists,
     build_fragment_lists,
-    index_fragment_lists,
     make_tile_grid,
+    stack_fragment_lists,
     update_fragment_slot,
 )
 from repro.core.projection import project
@@ -89,6 +96,8 @@ class MapResult:
     work: DeviceWork
     losses: jnp.ndarray
     builds: int = 0
+    image: Optional[jnp.ndarray] = None   # fresh render of the current
+                                          # keyframe after mapping (device)
 
 
 def _pose_adam_zero() -> AdamState:
@@ -99,14 +108,13 @@ def _stage_key(intr: Intrinsics, cfg, factor: int):
     """Everything a _Stage's compiled bundles depend on.  Stages are cached
     module-wide on this key so repeated ``run_slam`` calls (serving many
     trajectories) reuse XLA executables instead of re-jitting per engine.
-    Any new cfg field a bundle closes over MUST be added here, or the cache
-    serves stale executables (tests/test_engine.py guards this)."""
-    return (
-        intr, factor, cfg.iters_track, cfg.iters_map, cfg.lr_pose, cfg.lr_map,
-        cfg.lambda_pho, cfg.frag_capacity, cfg.backend, cfg.prune,
-        cfg.map_window, cfg.map_rebuild_stride, cfg.scan_unroll,
-        cfg.sched_bucket,
-    )
+
+    The key is **derived automatically** from the static leaves of the whole
+    config (``raster_api.static_fingerprint``, which also covers the
+    :class:`RasterPlan` each stage builds from it) — a new cfg field can
+    never be forgotten here, so the cache can never serve stale executables
+    (tests/test_engine.py::test_stage_key_distinguishes_engine_fields)."""
+    return (intr, factor, static_fingerprint(cfg))
 
 
 _STAGE_CACHE: dict = {}
@@ -122,8 +130,9 @@ class _Stage:
         self.factor = factor
         self.intr = intr.scaled(factor)
         self.grid = make_tile_grid(self.intr.height, self.intr.width)
-        self.rcfg = RenderConfig(capacity=cfg.frag_capacity, backend=cfg.backend,
-                                 sched_bucket=cfg.sched_bucket)
+        self.plan = RasterPlan(grid=self.grid, backend=cfg.backend,
+                               capacity=cfg.frag_capacity,
+                               sched_bucket=cfg.sched_bucket)
         # WSU: carry an execution schedule through the scans next to the
         # cached fragment lists (rebuilt only on the same boundaries).
         self.scheduled = cfg.backend == "schedule"
@@ -154,9 +163,9 @@ class _Stage:
     def _sched_core(self, frags: FragmentLists):
         """WSU schedule from the cached fragment counts (pure device math;
         rebuilt only where ``frags`` is rebuilt)."""
-        return build_schedule(frags.count, self.rcfg.chunk,
+        return build_schedule(frags.count, self.plan.chunk,
                               bucket=self.cfg.sched_bucket,
-                              max_trips=self.cfg.frag_capacity // self.rcfg.chunk)
+                              max_trips=self.plan.max_trips)
 
     def _track_iter_core(self, g, masked, xi, ostate, base_w2c, obs_rgb,
                          obs_depth, frags, sched=None):
@@ -167,7 +176,7 @@ class _Stage:
         def loss_fn(xi_, params):
             gg = G.with_params(g_eff, params)
             cam = Camera(self.intr, lie.se3_exp(xi_) @ base_w2c)
-            out = render(gg, cam, self.grid, self.rcfg, frags=frags, sched=sched)
+            out = render(gg, cam, self.plan.with_sched(sched), frags=frags)
             return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
                              obs_depth, self.cfg.lambda_pho)
 
@@ -177,16 +186,25 @@ class _Stage:
         upd, ostate = opt.update(g_xi, ostate)
         return loss, xi + upd, ostate, g_params
 
-    def _map_iter_core(self, g, masked, opt_state, w2c, obs_rgb, obs_depth,
-                       frags, sched=None):
+    def _map_iter_core(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
+                       cache, scheds=None):
+        """One mapping iteration over the **whole keyframe window**: one
+        batched multi-view render (leading window axis on ``kf_*`` and the
+        stacked ``cache``), mean window loss, one Adam step.  With a
+        one-keyframe window this is exactly the old single-view iteration."""
         g_eff = silence(g, masked)
+        w_len = kf_w2c.shape[0]
 
         def loss_fn(params):
             gg = G.with_params(g_eff, params)
-            out = render(gg, Camera(self.intr, w2c), self.grid, self.rcfg,
-                         frags=frags, sched=sched)
-            return slam_loss(out.image, out.depth, out.alpha, obs_rgb,
-                             obs_depth, self.cfg.lambda_pho)
+            out = render(gg, Camera(self.intr, kf_w2c),
+                         self.plan.with_sched(scheds), frags=cache)
+            per_view = [
+                slam_loss(out.image[b], out.depth[b], out.alpha[b],
+                          kf_rgb[b], kf_depth[b], self.cfg.lambda_pho)
+                for b in range(w_len)
+            ]
+            return sum(per_view) / w_len
 
         params = G.params_of(g)
         loss, grads = jax.value_and_grad(loss_fn)(params)
@@ -195,7 +213,7 @@ class _Stage:
         return loss, G.with_params(g, apply_updates(params, upd)), opt_state
 
     def _render_eval_core(self, g, masked, w2c):
-        out = render(silence(g, masked), Camera(self.intr, w2c), self.grid, self.rcfg)
+        out = render(silence(g, masked), Camera(self.intr, w2c), self.plan)
         return out.image
 
     # ---- fused bundles ---------------------------------------------------
@@ -266,8 +284,10 @@ class _Stage:
 
     def _map_scan(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, work):
         """Whole mapping phase in one dispatch: build the window's fragment
-        caches (vmapped), then scan the iterations, cycling keyframes and
-        stride-rebuilding the active slot's cache (Obs. 6 reuse).
+        caches (vmapped), then scan the iterations — each iteration renders
+        the **whole keyframe window as one batched stacked-grid dispatch**
+        (no per-keyframe cycling) and stride-rebuilds one slot's cache
+        round-robin (Obs. 6 reuse).
 
         The window length is static (one executable per length, cached
         module-wide) so no padded slots are ever built."""
@@ -280,20 +300,17 @@ class _Stage:
 
         def body(carry, it):
             g, opt_state, cache, scheds, work = carry
-            slot = jnp.mod(it, w_len)
-            pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0, keepdims=False)
-            rgb = jax.lax.dynamic_index_in_dim(kf_rgb, slot, 0, keepdims=False)
-            depth = jax.lax.dynamic_index_in_dim(kf_depth, slot, 0, keepdims=False)
-            frags = index_fragment_lists(cache, slot)
-            sched = (index_fragment_lists(scheds, slot)
-                     if self.scheduled else None)
             loss, g, opt_state = self._map_iter_core(
-                g, masked, opt_state, pose, rgb, depth, frags, sched)
-            work = device_work_add(work, frags.total, self.pixels,
-                                   jnp.sum(g.alive.astype(jnp.int32)))
+                g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, cache, scheds)
+            work = device_work_add(
+                work, jnp.sum(cache.total), w_len * self.pixels,
+                w_len * jnp.sum(g.alive.astype(jnp.int32)))
 
             def rebuild(operand):
                 c, s = operand
+                slot = jnp.mod((it + 1) // stride - 1, w_len)  # round-robin
+                pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0,
+                                                    keepdims=False)
                 fresh = self._build_core(g, masked, pose)
                 c = update_fragment_slot(c, slot, fresh)
                 if self.scheduled:
@@ -309,7 +326,11 @@ class _Stage:
             body, (g, opt_state, cache, scheds, work),
             jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
             unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
-        return g, opt_state, work, losses
+        # Fresh post-mapping render of the current keyframe (window's last
+        # slot) inside the same dispatch — the runner's PSNR eval without a
+        # separate render_eval dispatch.
+        image = self._render_eval_core(g, masked, kf_w2c[-1])
+        return g, opt_state, work, losses, image
 
 
 class StepEngine:
@@ -430,51 +451,58 @@ class StepEngine:
     def map_frame(self, g, opt_state, masked, window: List[Tuple]) -> MapResult:
         """Run the mapping iterations for one keyframe (or the frame-0
         bootstrap).  ``window`` is the host list of (rgb, depth, w2c np)
-        keyframes, oldest first, cycled across iterations."""
+        keyframes, oldest first; every iteration optimizes the whole window
+        jointly via one batched multi-view render."""
         cfg = self.cfg
         st = self.stage(1)
         w_len = len(window)
         assert 1 <= w_len <= cfg.map_window
+        kf_w2c = jnp.asarray(np.stack([w[2] for w in window]))
+        kf_rgb = jnp.asarray(np.stack([np.asarray(w[0]) for w in window]))
+        kf_depth = jnp.asarray(np.stack([np.asarray(w[1]) for w in window]))
         if self.cfg.fused:
-            kf_w2c = jnp.asarray(np.stack([w[2] for w in window]))
-            kf_rgb = jnp.asarray(np.stack([np.asarray(w[0]) for w in window]))
-            kf_depth = jnp.asarray(np.stack([np.asarray(w[1]) for w in window]))
             work = device_work_zero()
-            g, opt_state, work, losses = self._call(
+            g, opt_state, work, losses, image = self._call(
                 st.map_scan, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
                 work)
             builds = w_len + cfg.iters_map // cfg.map_rebuild_stride
             return MapResult(g=g, opt_state=opt_state, work=work,
-                             losses=losses, builds=builds)
+                             losses=losses, builds=builds, image=image)
 
         # -- unfused: per-iteration dispatches, per-iteration counter syncs.
-        cache = []
-        builds = 0
-        for rgb, depth, w2c in window:
-            cache.append(self._call(st.build, g, masked, jnp.asarray(w2c)))
-            builds += 1
+        cache = [self._call(st.build, g, masked, jnp.asarray(w[2]))
+                 for w in window]
+        builds = w_len
+        # Slot totals fetched once per (re)build, not per iteration; the
+        # stacked window cache is likewise re-stacked only when it changes.
+        totals = [int(c.total) for c in cache]
+        self.stats.syncs += w_len
+        stacked = stack_fragment_lists(cache)
         fr, px, gi, it_n = 0, 0, 0, 0
         losses = []
         for it in range(cfg.iters_map):
-            slot = it % w_len
-            rgb, depth, w2c = window[slot]
-            frags = cache[slot]
             loss, g, opt_state = self._call(
-                st.map_iter, g, masked, opt_state, jnp.asarray(w2c),
-                jnp.asarray(rgb), jnp.asarray(depth), frags)
-            self.stats.syncs += 2   # frags.total, num_alive
-            fr += int(frags.total)
-            px += st.pixels
-            gi += int(g.num_alive())
+                st.map_iter, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
+                stacked)
+            self.stats.syncs += 1   # num_alive
+            fr += sum(totals)
+            px += w_len * st.pixels
+            gi += w_len * int(g.num_alive())
             it_n += 1
             losses.append(loss)
             if (it + 1) % cfg.map_rebuild_stride == 0:
-                cache[slot] = self._call(st.build, g, masked, jnp.asarray(w2c))
+                slot = ((it + 1) // cfg.map_rebuild_stride - 1) % w_len
+                cache[slot] = self._call(
+                    st.build, g, masked, jnp.asarray(window[slot][2]))
+                totals[slot] = int(cache[slot].total)
+                self.stats.syncs += 1
+                stacked = stack_fragment_lists(cache)
                 builds += 1
         work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
                           iterations=it_n)
+        image = self._call(st.render_eval, g, masked, kf_w2c[-1])
         return MapResult(g=g, opt_state=opt_state, work=work,
-                         losses=jnp.stack(losses), builds=builds)
+                         losses=jnp.stack(losses), builds=builds, image=image)
 
     def geo_track_frame(self, base_w2c, pts_w, cols, valid, rgb, depth):
         """Photo-SLAM geometric tracking (no rendering, no pruning): the K

@@ -58,7 +58,8 @@ class SLAMConfig:
         default_factory=lambda: DownsampleConfig(enabled=False)
     )
     keyframe: KeyframePolicy = dataclasses.field(default_factory=KeyframePolicy)
-    map_window: int = 4             # recent keyframes cycled during mapping
+    map_window: int = 4             # recent keyframes optimized jointly per
+                                    # mapping iteration (one batched render)
     densify_per_kf: int = 384
     seed_stride: int = 3            # initial map seeding grid stride
     seed_opacity: float = 0.7
@@ -189,8 +190,8 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
     g, map_opt_state = mres.g, mres.opt_state
     keyframes.append((f0.rgb, f0.depth, pose.copy()))
     last_kf_rgb = f0.rgb
-    img0 = engine.render_eval(g, cur_masked(), pose)
-    wsnap, alive0, img0 = engine.fetch((mres.work, g.num_alive(), img0))
+    # The post-mapping eval render rides inside the mapping dispatch.
+    wsnap, alive0, img0 = engine.fetch((mres.work, g.num_alive(), mres.image))
     work.absorb(wsnap)
     kf_psnr.append(psnr_np(np.asarray(img0), f0.rgb))
     work.frames += 1
@@ -250,8 +251,8 @@ def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SL
             window = keyframes[-cfg.map_window:]
             mres = engine.map_frame(g, map_opt_state, cur_masked(), window)
             g, map_opt_state = mres.g, mres.opt_state
-            img = engine.render_eval(g, cur_masked(), pose)
-            wsnap, alive_now, img = engine.fetch((mres.work, g.num_alive(), img))
+            wsnap, alive_now, img = engine.fetch(
+                (mres.work, g.num_alive(), mres.image))
             work.absorb(wsnap)
             kf_psnr.append(psnr_np(np.asarray(img), frame.rgb))
             last_kf_idx = idx

@@ -8,7 +8,8 @@ from _hypothesis_shim import given, settings, strategies as st
 from repro.core import gaussians as G
 from repro.core.camera import Camera, Intrinsics
 from repro.core.projection import project
-from repro.core.render import RenderConfig, render
+from repro.core.raster_api import RasterPlan
+from repro.core.render import render
 from repro.core.sorting import (
     TILE,
     build_fragment_lists,
@@ -104,8 +105,9 @@ def test_early_termination_prefix_property(tiny_scene):
 
 def test_render_background_composite(tiny_scene):
     s = tiny_scene
-    out = render(s["g"], s["cam"], s["grid"],
-                 RenderConfig(capacity=s["capacity"], background=(1.0, 0.0, 0.0)))
+    out = render(s["g"], s["cam"],
+                 RasterPlan(grid=s["grid"], capacity=s["capacity"]),
+                 background=(1.0, 0.0, 0.0))
     # where nothing rendered, image == background
     empty = np.asarray(out.alpha) < 1e-6
     if empty.any():
@@ -160,7 +162,6 @@ def test_fragment_capacity_truncation_behavior():
     self-consistent (dataset generation and reconstruction share K)."""
     from repro.core.camera import Camera
     from repro.core.losses import psnr
-    from repro.core.render import RenderConfig, render
     from repro.slam.datasets import make_dataset
 
     ds = make_dataset("room0", num_frames=1, height=96, width=128,
@@ -175,6 +176,6 @@ def test_fragment_capacity_truncation_behavior():
         overflows.append(int(frags.overflow))
     assert overflows[0] > overflows[1] > overflows[2]
 
-    full = render(ds.gt_field, cam, grid, RenderConfig(capacity=768))
-    trunc = render(ds.gt_field, cam, grid, RenderConfig(capacity=192))
+    full = render(ds.gt_field, cam, RasterPlan(grid=grid, capacity=768))
+    trunc = render(ds.gt_field, cam, RasterPlan(grid=grid, capacity=192))
     assert float(psnr(trunc.image, full.image)) > 25.0

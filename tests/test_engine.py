@@ -175,6 +175,48 @@ def test_map_frame_reuses_fragment_lists(scene):
 
 
 # ---------------------------------------------------------------------------
+# batched window mapping: one multi-view dispatch per phase, paths agree
+# ---------------------------------------------------------------------------
+
+def test_map_frame_batched_window_parity(scene):
+    """Mapping optimizes the whole keyframe window jointly — each iteration
+    is ONE batched multi-view render.  The fused scan and the per-iteration
+    loop must agree on losses, work counters, builds and the post-mapping
+    eval image, and the fused phase must stay a single dispatch."""
+    cfg_f = _cfg(fused=True, iters_map=6, map_rebuild_stride=3)
+    cfg_u = _cfg(fused=False, iters_map=6, map_rebuild_stride=3)
+    g = _seed_map(scene, cfg_f)
+    masked = jnp.zeros((cfg_f.capacity,), bool)
+    window = [(scene.frames[i].rgb, scene.frames[i].depth,
+               scene.frames[i].w2c_gt.copy()) for i in (0, 1, 2)]
+
+    from repro.core import gaussians as G
+    from repro.train.optimizer import Adam
+
+    opt = Adam(lr=cfg_f.lr_map)
+    eng_f = StepEngine(scene.intrinsics, cfg_f)
+    eng_u = StepEngine(scene.intrinsics, cfg_u)
+
+    before = eng_f.stats.dispatches
+    mr_f = eng_f.map_frame(_fresh(g), opt.init(G.params_of(g)), masked, window)
+    # ONE dispatch covers window builds, all iterations AND the eval render.
+    assert eng_f.stats.dispatches - before == 1
+    mr_u = eng_u.map_frame(_fresh(g), opt.init(G.params_of(g)), masked, window)
+
+    w_len, iters, stride = 3, cfg_u.iters_map, cfg_u.map_rebuild_stride
+    assert mr_f.builds == mr_u.builds == w_len + iters // stride
+    assert tuple(int(x) for x in _work_tuple(mr_f.work)) == \
+        tuple(int(x) for x in _work_tuple(mr_u.work))
+    # every iteration renders the whole window
+    assert int(mr_f.work.pixels) == iters * w_len * 64 * 64
+    assert int(mr_f.work.iterations) == iters
+    np.testing.assert_allclose(np.asarray(mr_f.losses), np.asarray(mr_u.losses),
+                               rtol=2e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mr_f.image), np.asarray(mr_u.image),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # stage cache: every engine-relevant cfg field must change the cache key
 # ---------------------------------------------------------------------------
 

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, strategies as st
 
+from repro.core.raster_api import RasterInputs, RasterPlan
 from repro.core.sorting import make_tile_grid
 from repro.kernels import gmu, ops, ref
 from repro.kernels.tile_render import tile_render_fwd
@@ -76,8 +77,9 @@ def test_backward_matches_ref_autodiff(tiny_scene, backend):
 
     def loss(mu2d, conic, color, opacity, depth, backend):
         img, dep, ft = ops.rasterize(
-            mu2d, conic, color, opacity, depth, frags.idx, frags.count,
-            grid=grid, backend=backend,
+            RasterInputs(mu2d=mu2d, conic=conic, color=color, opacity=opacity,
+                         depth=depth, frags=frags),
+            RasterPlan(grid=grid, backend=backend, capacity=s["capacity"]),
         )
         return jnp.mean((img - target) ** 2) + 0.1 * jnp.mean(dep) + 0.05 * jnp.mean(ft)
 

@@ -101,14 +101,15 @@ def test_interval_adapts_to_churn():
 
 
 def test_masked_gaussians_render_as_nothing(tiny_scene):
-    from repro.core.render import RenderConfig, render
+    from repro.core.raster_api import RasterPlan
+    from repro.core.render import render
     from repro.slam.runner import _silence
 
     s = tiny_scene
     g = s["g"]
     masked = jnp.arange(g.capacity) < g.capacity  # mask everything
-    out = render(_silence(g, masked), s["cam"], s["grid"],
-                 RenderConfig(capacity=s["capacity"]))
+    out = render(_silence(g, masked), s["cam"],
+                 RasterPlan(grid=s["grid"], capacity=s["capacity"]))
     assert float(out.alpha.max()) < 1e-3
 
 

@@ -7,12 +7,15 @@ bucketing, odd tile counts, empty tiles and overflowed tiles must produce
 raster-order Pallas kernels (and match the ref.py oracle to float tolerance).
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, strategies as st
 
+from repro.core.raster_api import RasterInputs, RasterPlan
 from repro.core.schedule import (
     TileSchedule,
     build_schedule,
@@ -171,14 +174,17 @@ def test_ops_schedule_backend_bit_exact(tiny_scene):
 
     def loss(mu2d, conic, color, opacity, depth, backend):
         img, dep, ft = ops.rasterize(
-            mu2d, conic, color, opacity, depth, frags.idx, frags.count,
-            grid=grid, backend=backend,
+            RasterInputs(mu2d=mu2d, conic=conic, color=color, opacity=opacity,
+                         depth=depth, frags=frags),
+            RasterPlan(grid=grid, backend=backend, capacity=s["capacity"]),
         )
         return jnp.mean((img - target) ** 2) + 0.1 * jnp.mean(dep) + 0.05 * jnp.mean(ft)
 
     args = (proj.mu2d, proj.conic, proj.color, proj.opacity, proj.depth)
-    out_p = ops.rasterize(*args, frags.idx, frags.count, grid=grid, backend="pallas")
-    out_s = ops.rasterize(*args, frags.idx, frags.count, grid=grid, backend="schedule")
+    inputs = RasterInputs.from_projection(proj, frags)
+    plan = RasterPlan(grid=grid, capacity=s["capacity"])
+    out_p = ops.rasterize(inputs, dataclasses.replace(plan, backend="pallas"))
+    out_s = ops.rasterize(inputs, dataclasses.replace(plan, backend="schedule"))
     for a, b, name in zip(out_p, out_s, ["img", "depth", "finalt"]):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
 
@@ -201,12 +207,11 @@ def test_explicit_sched_matches_autobuilt(tiny_scene):
     op build one from ``count`` (the per-iteration path)."""
     s = tiny_scene
     proj, frags, grid = s["proj"], s["frags"], s["grid"]
-    args = (proj.mu2d, proj.conic, proj.color, proj.opacity, proj.depth)
+    inputs = RasterInputs.from_projection(proj, frags)
+    plan = RasterPlan(grid=grid, backend="schedule", capacity=s["capacity"])
     sched = build_schedule(frags.count, 16, max_trips=frags.idx.shape[1] // 16)
-    out_a = ops.rasterize(*args, frags.idx, frags.count, grid=grid,
-                          backend="schedule")
-    out_b = ops.rasterize(*args, frags.idx, frags.count, grid=grid,
-                          backend="schedule", sched=sched)
+    out_a = ops.rasterize(inputs, plan)
+    out_b = ops.rasterize(inputs, plan.with_sched(sched))
     for a, b in zip(out_a, out_b):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
