@@ -22,7 +22,7 @@ from benchmarks.common import emit
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 def _measure(ds, fused: bool, prune: bool):
@@ -34,9 +34,9 @@ def _measure(ds, fused: bool, prune: bool):
     )
     # Warm-up run compiles every bundle; the timed run measures the steady
     # state the dispatch/sync counts describe.
-    run_slam(ds, cfg)
+    run_sequence(ds, cfg)
     t0 = time.time()
-    res = run_slam(ds, cfg)
+    res = run_sequence(ds, cfg)
     wall = time.time() - t0
     frames = res.work.frames
     return {

@@ -12,9 +12,10 @@ load distribution of real SLAM frames, and the one the WSU targets):
   drop >= 2x.  ``tail_*`` tracks the residual balance win of pairing
   (tile-grid max/mean vs pair-grid max/mean; note a pair containing the
   heaviest tile bounds this ratio's reduction at exactly 2x).
-* **sched_run** — a short fused ``run_slam`` with ``backend="schedule"``:
-  the schedule rides the scan carries, so dispatches/syncs per frame must
-  stay at the fused-engine floor (~2.4 / 1.25).
+* **sched_run** — a short fused ``run_sequence`` with ``backend="schedule"``:
+  the schedule rides the scan carries (and the session step), so
+  dispatches/syncs per frame must stay at the fused-session floor (~1.0
+  dispatch per frame, one finalize sync).
 
 Run:  PYTHONPATH=src python -m benchmarks.run --only wsu
   or: PYTHONPATH=src python -m benchmarks.bench_wsu
@@ -38,7 +39,7 @@ from repro.core.schedule import build_schedule, pair_loads
 from repro.slam.datasets import make_dataset
 from repro.slam.engine import StepEngine
 from repro.slam.metrics import imbalance_stats
-from repro.slam.runner import SLAMConfig, _seed_map, run_slam
+from repro.slam.session import SLAMConfig, _seed_map, run_sequence
 
 
 def _imbalance_telemetry(ds, cfg):
@@ -96,9 +97,9 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
 
     # Warm-up run compiles the scheduled bundles; the timed run measures the
     # steady state (same convention as bench_slam_fps).
-    run_slam(ds, cfg)
+    run_sequence(ds, cfg)
     t0 = time.time()
-    res = run_slam(ds, cfg)
+    res = run_sequence(ds, cfg)
     wall = time.time() - t0
     frames = res.work.frames
     telemetry["scene"] = f"{ds.name}-synthetic"

@@ -12,7 +12,7 @@ from benchmarks.common import emit
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 def run(quick: bool = True):
@@ -26,7 +26,7 @@ def run(quick: bool = True):
             prune=PruneConfig(k0=4, step_frac=0.15, max_ratio=ratio)
             if ratio > 0 else None,
         )
-        res = run_slam(ds, cfg)
+        res = run_sequence(ds, cfg)
         emit(
             f"fig14a/prune_cap_{int(ratio*100)}pct",
             res.wall_time_s * 1e6 / res.work.frames,

@@ -27,7 +27,7 @@ from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.kernels import gmu, ops, ref
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 def _scene(num_frames=8):
@@ -42,7 +42,7 @@ def rb_buffer_flops(scene):
     from repro.core.sorting import build_fragment_lists, make_tile_grid
 
     f0 = scene.frames[0]
-    from repro.slam.runner import _seed_map, SLAMConfig as SC
+    from repro.slam.session import _seed_map, SLAMConfig as SC
 
     g = _seed_map(scene, SC(capacity=2048, frag_capacity=96))
     grid = make_tile_grid(64, 64)
@@ -90,7 +90,7 @@ def run(quick: bool = True):
     from repro.core.projection import project
     from repro.core.camera import Camera
     from repro.core.sorting import build_fragment_lists, make_tile_grid
-    from repro.slam.runner import _seed_map
+    from repro.slam.session import _seed_map
 
     g = _seed_map(scene, SLAMConfig(capacity=2048, frag_capacity=96))
     grid = make_tile_grid(64, 64)
@@ -120,14 +120,14 @@ def run(quick: bool = True):
          f"skip_fraction={1 - blended / max(listed, 1):.3f}")
 
     # --- algorithm techniques: work reduction --------------------------------
-    base = run_slam(scene, SLAMConfig(
+    base = run_sequence(scene, SLAMConfig(
         iters_track=6, iters_map=10, capacity=3072, frag_capacity=96,
         keyframe=KeyframePolicy(kind="monogs", interval=4)))
-    prune_only = run_slam(scene, SLAMConfig(
+    prune_only = run_sequence(scene, SLAMConfig(
         iters_track=6, iters_map=10, capacity=3072, frag_capacity=96,
         keyframe=KeyframePolicy(kind="monogs", interval=4),
         prune=PruneConfig(k0=4, step_frac=0.1)))
-    down_only = run_slam(scene, SLAMConfig(
+    down_only = run_sequence(scene, SLAMConfig(
         iters_track=6, iters_map=10, capacity=3072, frag_capacity=96,
         keyframe=KeyframePolicy(kind="monogs", interval=4),
         downsample=DownsampleConfig(enabled=True)))
@@ -147,12 +147,12 @@ def run(quick: bool = True):
     cfg_kw = dict(iters_track=6, iters_map=10, capacity=3072, frag_capacity=96,
                   keyframe=KeyframePolicy(kind="monogs", interval=4))
     for fused in (True, False):
-        run_slam(small, SLAMConfig(fused=fused, **cfg_kw))  # compile
+        run_sequence(small, SLAMConfig(fused=fused, **cfg_kw))  # compile
     t0 = time.time()
-    fused_res = run_slam(small, SLAMConfig(fused=True, **cfg_kw))
+    fused_res = run_sequence(small, SLAMConfig(fused=True, **cfg_kw))
     t_fused = time.time() - t0
     t0 = time.time()
-    loop_res = run_slam(small, SLAMConfig(fused=False, **cfg_kw))
+    loop_res = run_sequence(small, SLAMConfig(fused=False, **cfg_kw))
     t_loop = time.time() - t0
     nf = fused_res.work.frames
     emit("fig17/fused_engine", t_fused * 1e6 / nf,

@@ -15,7 +15,7 @@ from repro.core.downsample import DownsampleConfig
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 _POLICIES = {
     "gsslam": KeyframePolicy(kind="gsslam", trans_thresh=0.08, rot_thresh=0.08),
@@ -39,7 +39,7 @@ def run(quick: bool = True):
                     prune=PruneConfig(k0=5, step_frac=0.08) if variant == "rtgs" else None,
                     downsample=DownsampleConfig(enabled=(variant == "rtgs")),
                 )
-                res = run_slam(ds, cfg)
+                res = run_sequence(ds, cfg)
                 fps = res.work.frames / max(res.wall_time_s, 1e-9)
                 emit(
                     f"table6/{scene}/{algo}/{variant}",

@@ -10,7 +10,7 @@ from benchmarks.common import emit
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 def run(quick: bool = True):
@@ -22,7 +22,7 @@ def run(quick: bool = True):
             iters_track=6, iters_map=8, capacity=4096, frag_capacity=96,
             prune=PruneConfig(k0=5, step_frac=0.08) if variant == "rtgs" else None,
         )
-        res = run_slam(ds, cfg)
+        res = run_sequence(ds, cfg)
         emit(
             f"table7/splatam/{variant}",
             res.wall_time_s * 1e6 / res.work.frames,

@@ -1,0 +1,67 @@
+"""Multi-session SLAM serving demo: four concurrent RGB-D streams through
+ONE SessionPool — one shared XLA executable, one dispatch per frame-step.
+
+Each stream is a different synthetic scene.  The pool steps all four in
+lockstep; per-session outputs are bitwise-equal to running each stream
+alone (tests/test_session.py proves it), so serving S streams costs 1/S
+dispatches per stream-frame with zero accuracy tradeoff.
+
+Run:  PYTHONPATH=src python examples/serve_slam.py [--frames 8] [--sessions 4]
+"""
+
+import argparse
+import time
+
+from repro.core.keyframes import KeyframePolicy
+from repro.slam.datasets import make_dataset, registered_scenes
+from repro.slam.engine import EngineStats
+from repro.slam.session import SLAMConfig, SessionPool, session_init, session_step_key
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--frames", type=int, default=8)
+    ap.add_argument("--sessions", type=int, default=4)
+    args = ap.parse_args()
+    s = args.sessions
+
+    cfg = SLAMConfig(
+        iters_track=4, iters_map=6, capacity=2048, frag_capacity=64,
+        map_window=2, scan_unroll=1,
+        keyframe=KeyframePolicy(kind="monogs", interval=3),
+    )
+    names = registered_scenes()
+    print(f"generating {s} synthetic streams ({args.frames} frames each)…")
+    streams = [make_dataset(names[i % len(names)], num_frames=args.frames,
+                            height=64, width=64, num_gaussians=1000,
+                            frag_capacity=64, seed=i) for i in range(s)]
+
+    init_stats = EngineStats()
+    pool = SessionPool([session_init(ds, cfg, stats=init_stats)
+                        for ds in streams])
+    print(f"pool of {pool.size} sessions; step executable key = "
+          f"{hash(session_step_key(pool.stacked)) & 0xffffffff:#010x}")
+
+    t0 = time.time()
+    for t in range(1, args.frames):
+        pool.step([ds.frames[t] for ds in streams])
+    wall = time.time() - t0
+
+    steps = args.frames - 1
+    print(f"\nserved {s} streams x {steps} frames in {wall:.1f}s "
+          f"(incl. one-time compile)")
+    print(f"dispatches: {pool.stats.dispatches} total = "
+          f"{pool.stats.dispatches / steps:.2f} per frame-step = "
+          f"{pool.stats.dispatches / (s * steps):.2f} per stream-frame "
+          f"(solo serving would pay ~1.0)")
+
+    print(f"\n{'slot':>4} {'scene':>8} {'ATE cm':>8} {'PSNR dB':>8} "
+          f"{'keyframes':>9}")
+    for i, ds in enumerate(streams):
+        fin = pool.finalize(i, gt_w2c=[f.w2c_gt for f in ds.frames])
+        print(f"{i:>4} {ds.name:>8} {fin.ate * 100:>8.2f} "
+              f"{fin.mean_psnr:>8.2f} {len(fin.keyframe_psnr):>9}")
+
+
+if __name__ == "__main__":
+    main()

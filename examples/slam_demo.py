@@ -15,7 +15,7 @@ from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.core.raster_api import registered_backends
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 def main():
@@ -48,7 +48,7 @@ def main():
             fused=not args.unfused,
         )
         print(f"\nrunning {variant} ({'per-iteration' if args.unfused else 'scan-fused'} engine)…")
-        res = run_slam(ds, cfg, verbose=True)
+        res = run_sequence(ds, cfg, verbose=True)
         results[variant] = res
         nf = res.work.frames
         print(f"  ATE {res.ate*100:6.2f} cm | PSNR {res.mean_psnr:5.2f} dB | "

@@ -93,6 +93,16 @@ def _desk_points(key, n: int):
     return pts, jnp.clip(cols, 0.02, 0.98)
 
 
+# Registered synthetic scenes (mirrors the raster backend registry's error
+# style: unknown names raise listing what exists instead of a bare KeyError
+# or a silent fallback to room0's geometry).
+SCENES: tuple = ("room0", "room1", "hall0", "desk0")
+
+
+def registered_scenes() -> tuple:
+    return SCENES
+
+
 def _surface_points(key, name: str, n: int):
     """Sample points + colors on a procedural room's surfaces."""
     if name.startswith("desk"):
@@ -163,6 +173,11 @@ def make_dataset(
     seed: int = 0,
     frag_capacity: int = 128,
 ) -> SLAMDataset:
+    if name not in SCENES:
+        raise ValueError(
+            f"unknown scene {name!r}; registered scenes: "
+            f"{', '.join(SCENES)}"
+        )
     # zlib.crc32, not hash(): str hashing is salted per process, which would
     # silently give every process a different "deterministic" scene.
     key = jax.random.PRNGKey(seed + zlib.crc32(name.encode()) % 1000)

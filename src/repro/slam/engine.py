@@ -119,6 +119,46 @@ def _stage_key(intr: Intrinsics, cfg, factor: int):
 
 _STAGE_CACHE: dict = {}
 _GEO_CACHE: dict = {}
+_GEO_JIT_CACHE: dict = {}
+
+
+def get_stage(intr: Intrinsics, cfg, factor: int) -> "_Stage":
+    """Module-wide stage lookup (compiled-bundle cache keyed on
+    :func:`_stage_key`).  Shared by :class:`StepEngine` and the
+    :mod:`repro.slam.session` step cores, so an engine and a session with
+    the same static config reuse the same XLA executables."""
+    key = _stage_key(intr, cfg, factor)
+    if key not in _STAGE_CACHE:
+        _STAGE_CACHE[key] = _Stage(intr, cfg, factor)
+    return _STAGE_CACHE[key]
+
+
+def get_geo_scan(intr: Intrinsics, cfg):
+    """Pure geometric-tracking cores for the Photo-SLAM base algorithm:
+    ``(geo_scan, geo_vg)`` where ``geo_scan(base, pts, cols, valid, rgb,
+    depth) -> xi`` runs the K pose iterations as one ``lax.scan`` (traceable
+    inside larger bundles — the session step embeds it) and ``geo_vg`` is the
+    per-iteration value-and-grad (the unfused baseline)."""
+    key = (intr, cfg.lr_pose, cfg.iters_track)
+    if key not in _GEO_CACHE:
+        geo_vg = geometric.make_geometric_tracker(intr)
+        iters = cfg.iters_track
+        popt = Adam(lr=cfg.lr_pose * 2)
+
+        def geo_scan(base, pts, cs, vl, im, dp):
+            def body(carry, _):
+                xi, ostate = carry
+                _, gxi = geo_vg(xi, base, pts, cs, vl, im, dp)
+                upd, ostate = popt.update(gxi, ostate)
+                return (xi + upd, ostate), None
+
+            (xi, _), _ = jax.lax.scan(
+                body, (jnp.zeros(6), popt.init(jnp.zeros(6))), None,
+                length=iters)
+            return xi
+
+        _GEO_CACHE[key] = (geo_scan, geo_vg)
+    return _GEO_CACHE[key]
 
 
 class _Stage:
@@ -153,6 +193,7 @@ class _Stage:
             "donate_argnames": ("g", "opt_state", "work")
         }
         self.map_scan = jax.jit(self._map_scan, **donate_map)
+        self.map_scan_masked = jax.jit(self._map_scan_masked, **donate_map)
 
     # ---- cores (pure, shared by fused scans and per-iteration jits) -----
 
@@ -187,11 +228,17 @@ class _Stage:
         return loss, xi + upd, ostate, g_params
 
     def _map_iter_core(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
-                       cache, scheds=None):
+                       cache, scheds=None, kf_valid=None):
         """One mapping iteration over the **whole keyframe window**: one
         batched multi-view render (leading window axis on ``kf_*`` and the
         stacked ``cache``), mean window loss, one Adam step.  With a
-        one-keyframe window this is exactly the old single-view iteration."""
+        one-keyframe window this is exactly the old single-view iteration.
+
+        ``kf_valid`` (a (W,) bool mask) supports the session layer's
+        fixed-shape keyframe ring: invalid slots still render (static
+        shapes) but contribute exactly zero to the loss, so a mask with V
+        valid slots equals a V-length window bitwise (``x * 1.0 == x`` and
+        ``x + 0.0 == x``)."""
         g_eff = silence(g, masked)
         w_len = kf_w2c.shape[0]
 
@@ -204,7 +251,10 @@ class _Stage:
                           kf_rgb[b], kf_depth[b], self.cfg.lambda_pho)
                 for b in range(w_len)
             ]
-            return sum(per_view) / w_len
+            if kf_valid is None:
+                return sum(per_view) / w_len
+            vw = kf_valid.astype(jnp.float32)
+            return sum(per_view[b] * vw[b] for b in range(w_len)) / jnp.sum(vw)
 
         params = G.params_of(g)
         loss, grads = jax.value_and_grad(loss_fn)(params)
@@ -332,6 +382,58 @@ class _Stage:
         image = self._render_eval_core(g, masked, kf_w2c[-1])
         return g, opt_state, work, losses, image
 
+    def _map_scan_masked(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
+                         kf_valid, work):
+        """Fixed-shape variant of :meth:`_map_scan` for the session layer's
+        keyframe ring: the window always has ``map_window`` slots and a
+        (W,) bool ``kf_valid`` mask marks the V populated ones (a contiguous
+        prefix, oldest first).  Invalid slots render but are excluded from
+        the loss, the work counters, the round-robin stride rebuild and the
+        final eval — so a half-full ring matches a V-length window exactly,
+        while every window fill shares ONE executable (the property the
+        vmapped multi-session step needs)."""
+        stride = self.cfg.map_rebuild_stride
+        w_len = kf_w2c.shape[0]
+        n_valid = jnp.sum(kf_valid.astype(jnp.int32))
+        cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+        scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
+
+        def body(carry, it):
+            g, opt_state, cache, scheds, work = carry
+            loss, g, opt_state = self._map_iter_core(
+                g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, cache, scheds,
+                kf_valid=kf_valid)
+            work = device_work_add(
+                work, jnp.sum(cache.total * kf_valid.astype(jnp.int32)),
+                n_valid * self.pixels,
+                n_valid * jnp.sum(g.alive.astype(jnp.int32)))
+
+            def rebuild(operand):
+                c, s = operand
+                slot = jnp.mod((it + 1) // stride - 1, n_valid)  # round-robin
+                pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0,
+                                                    keepdims=False)
+                fresh = self._build_core(g, masked, pose)
+                c = update_fragment_slot(c, slot, fresh)
+                if self.scheduled:
+                    s = update_fragment_slot(s, slot, self._sched_core(fresh))
+                return c, s
+
+            cache, scheds = jax.lax.cond(
+                jnp.mod(it + 1, stride) == 0, rebuild, lambda o: o,
+                (cache, scheds))
+            return (g, opt_state, cache, scheds, work), loss
+
+        (g, opt_state, _, _, work), losses = jax.lax.scan(
+            body, (g, opt_state, cache, scheds, work),
+            jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
+            unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
+        # Eval render of the newest populated slot (the current keyframe).
+        pose = jax.lax.dynamic_index_in_dim(kf_w2c, n_valid - 1, 0,
+                                            keepdims=False)
+        image = self._render_eval_core(g, masked, pose)
+        return g, opt_state, work, losses, image
+
 
 class StepEngine:
     """The on-device optimization engine behind ``run_slam``.
@@ -365,10 +467,7 @@ class StepEngine:
         return jax.device_get(tree)
 
     def stage(self, factor: int) -> _Stage:
-        key = _stage_key(self.intr, self.cfg, factor)
-        if key not in _STAGE_CACHE:
-            _STAGE_CACHE[key] = _Stage(self.intr, self.cfg, factor)
-        return _STAGE_CACHE[key]
+        return get_stage(self.intr, self.cfg, factor)
 
     # ---- phases ----------------------------------------------------------
 
@@ -510,25 +609,10 @@ class StepEngine:
         cfg = self.cfg
         if self._geo is None:
             key = (self.intr, cfg.lr_pose, cfg.iters_track)
-            if key not in _GEO_CACHE:
-                geo_vg = geometric.make_geometric_tracker(self.intr)
-
-                def geo_scan(base, pts, cs, vl, im, dp):
-                    popt = Adam(lr=cfg.lr_pose * 2)
-
-                    def body(carry, _):
-                        xi, ostate = carry
-                        _, gxi = geo_vg(xi, base, pts, cs, vl, im, dp)
-                        upd, ostate = popt.update(gxi, ostate)
-                        return (xi + upd, ostate), None
-
-                    (xi, _), _ = jax.lax.scan(
-                        body, (jnp.zeros(6), popt.init(jnp.zeros(6))), None,
-                        length=cfg.iters_track)
-                    return xi
-
-                _GEO_CACHE[key] = (jax.jit(geo_scan), geo_vg)
-            self._geo, self._geo_vg = _GEO_CACHE[key]
+            geo_scan, geo_vg = get_geo_scan(self.intr, cfg)
+            if key not in _GEO_JIT_CACHE:
+                _GEO_JIT_CACHE[key] = jax.jit(geo_scan)
+            self._geo, self._geo_vg = _GEO_JIT_CACHE[key], geo_vg
 
         base = jnp.asarray(base_w2c)
         track_px = (self.intr.height // 4) * (self.intr.width // 4)

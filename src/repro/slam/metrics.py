@@ -8,8 +8,14 @@ Two counter forms:
   ints, no overflow), the public accounting surface of ``SLAMResult``.
 * :class:`DeviceWork` — a small int32 pytree threaded through the engine's
   ``lax.scan`` carries so per-iteration accounting happens **on device**;
-  it is fetched once per frame (not per iteration) and absorbed into the
-  host ``WorkCounters``.  Keeping it per-frame bounds the int32 range.
+  the engine fetches it once per frame (not per iteration) and absorbs it
+  into the host ``WorkCounters``, which bounds the int32 range per frame.
+  The session layer instead accumulates a *run-cumulative* ``DeviceWork``
+  on device (fetched once at finalize): that trades the per-frame bound
+  for ~2^31 total — ample for the synthetic scenes here, but a
+  paper-resolution stream (~15M fragments per keyframe) would wrap the
+  fragment counter after a few hundred keyframes; fetch + absorb
+  per-frame (``StepResult.work``) for long high-resolution runs.
 """
 
 from __future__ import annotations
@@ -44,6 +50,15 @@ def device_work_add(w: DeviceWork, fragments, pixels, alive) -> DeviceWork:
         gaussians_iters=w.gaussians_iters + jnp.asarray(alive, jnp.int32),
         iterations=w.iterations + one,
     )
+
+
+def device_work_merge(a: DeviceWork, b: DeviceWork) -> DeviceWork:
+    """Elementwise sum of two accumulators (jit/scan-safe).  The session
+    layer uses this both for a frame's track+map snapshot and for the
+    session's cumulative device-resident counters (int32 — fine up to
+    ~2e9 fragments, i.e. tens of thousands of frames at bench scales)."""
+    return DeviceWork(*(jnp.asarray(x, jnp.int32) + jnp.asarray(y, jnp.int32)
+                        for x, y in zip(a, b)))
 
 
 class ImbalanceStats(NamedTuple):

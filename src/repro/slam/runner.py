@@ -1,279 +1,48 @@
-"""The 3DGS-SLAM frame loop with RTGS's multi-level redundancy reduction.
+"""Legacy entry point of the 3DGS-SLAM frame loop — now a thin compatibility
+wrapper over the SlamSession API.
 
-Supports the paper's four base algorithms (MonoGS / GS-SLAM / Photo-SLAM /
-SplaTAM keyframe policies; Photo-SLAM swaps in the geometric tracker) with
-the RTGS techniques individually switchable:
+The frame loop lives in :mod:`repro.slam.session` since SlamSession v1:
+``session_init`` seeds + bootstraps, ``session_step`` runs one fused
+tracking+mapping dispatch per frame, ``session_finalize`` fetches the
+device-resident logs, and ``run_sequence`` composes the three exactly the
+way ``run_slam`` used to.  ``SLAMConfig``/``SLAMResult`` and the map seeder
+moved there too; this module re-exports them so historical imports keep
+working.
 
-  * adaptive Gaussian pruning  (§4.1)  — ``cfg.prune`` is a PruneConfig
-  * dynamic downsampling       (§4.2)  — ``cfg.downsample.enabled``
-  * fragment-list reuse (Obs. 6 / WSU inter-iteration similarity) — lists
-    cached per keyframe window slot and rebuilt on ``map_rebuild_stride``
-    and §4.1 interval boundaries, not per iteration.
-
-This file is the **host layer** only: keyframe policy, densification and
-map seeding (Python/NumPy decisions — the GPU systems run these on CPU
-too).  The inner optimization loops live in :mod:`repro.slam.engine` as
-per-(stage, phase) jitted step bundles; with ``cfg.fused=True`` (default)
-the K tracking iterations and the mapping-window iterations each execute
-as a single ``lax.scan`` dispatch with device-resident pruning state and
-work counters, fetched once per frame.
+``run_slam`` itself survives as a warn-once deprecated alias of
+``run_sequence`` (bitwise-identical results — tests/test_session.py holds
+it to that).  New code should use the session API directly; multi-stream
+serving goes through ``session.SessionPool``/``step_many``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import List, Optional
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import gaussians as G
-from repro.core import lie, pruning
-from repro.core.camera import Camera, Intrinsics
-from repro.core.downsample import DownsampleConfig, downsample_depth, downsample_image, side_factor
-from repro.core.keyframes import KeyframePolicy
-from repro.slam import geometric
+from repro.core.raster_api import warn_once
 from repro.slam.datasets import SLAMDataset
-from repro.slam.engine import StepEngine, silence as _silence  # noqa: F401 (re-export)
-from repro.slam.metrics import WorkCounters, ate_rmse, psnr_np
-from repro.train.optimizer import Adam
-
-
-@dataclasses.dataclass
-class SLAMConfig:
-    base_algo: str = "monogs"       # monogs | gsslam | photoslam | splatam
-    iters_track: int = 12
-    iters_map: int = 24
-    lr_pose: float = 3e-3
-    lr_map: float = 8e-3
-    lambda_pho: float = 0.8
-    capacity: int = 8192            # Gaussian pool size
-    frag_capacity: int = 128        # K fragments per tile
-    backend: str = "ref"            # rasterizer backend (ref is CPU-fast;
-                                    # "schedule" = WSU-scheduled Pallas)
-    sched_bucket: int = 1           # WSU trip bucketing (schedule backend)
-    prune: Optional[pruning.PruneConfig] = None
-    downsample: DownsampleConfig = dataclasses.field(
-        default_factory=lambda: DownsampleConfig(enabled=False)
-    )
-    keyframe: KeyframePolicy = dataclasses.field(default_factory=KeyframePolicy)
-    map_window: int = 4             # recent keyframes optimized jointly per
-                                    # mapping iteration (one batched render)
-    densify_per_kf: int = 384
-    seed_stride: int = 3            # initial map seeding grid stride
-    seed_opacity: float = 0.7
-    fused: bool = True              # scan-fused engine vs per-iteration loop
-    map_rebuild_stride: int = 6     # mapping fragment-list rebuild cadence
-    scan_unroll: int = 4            # lax.scan unroll (XLA:CPU runs rolled
-                                    # loop bodies ~30% slower; unrolling
-                                    # trades compile time for straight-line
-                                    # code while keeping ONE dispatch)
-
-
-@dataclasses.dataclass
-class SLAMResult:
-    est_w2c: List[np.ndarray]
-    gt_w2c: List[np.ndarray]
-    keyframe_psnr: List[float]
-    ate: float
-    work: WorkCounters
-    alive_per_frame: List[int]
-    wall_time_s: float
-    prune_removed: int
-    dispatches: int = 0             # jitted calls issued by the engine
-    syncs: int = 0                  # device->host fetches issued
-
-    @property
-    def mean_psnr(self) -> float:
-        return float(np.mean(self.keyframe_psnr)) if self.keyframe_psnr else 0.0
+from repro.slam.engine import silence as _silence  # noqa: F401 (re-export)
+from repro.slam.session import (  # noqa: F401 (compat re-exports)
+    SLAMConfig,
+    SLAMResult,
+    _seed_map,
+    run_sequence,
+)
+from repro.core.camera import Camera, Intrinsics
 
 
 def w2c_to_cam(intr: Intrinsics, w2c) -> Camera:
     return Camera(intr, w2c)
 
 
-def _seed_map(dataset: SLAMDataset, cfg: SLAMConfig) -> G.GaussianField:
-    """Bootstrap the map from frame 0's RGB-D (standard 3DGS-SLAM init)."""
-    f0 = dataset.frames[0]
-    intr = dataset.intrinsics
-    ys = np.arange(0, intr.height, cfg.seed_stride)
-    xs = np.arange(0, intr.width, cfg.seed_stride)
-    vv, uu = np.meshgrid(ys, xs, indexing="ij")
-    uu, vv = uu.reshape(-1), vv.reshape(-1)
-    d = f0.depth[vv, uu]
-    ok = d > 1e-3
-    uu, vv, d = uu[ok], vv[ok], d[ok]
-    x_cam = np.stack(
-        [(uu + 0.5 - intr.cx) / intr.fx * d, (vv + 0.5 - intr.cy) / intr.fy * d, d], -1
+def run_slam(dataset: SLAMDataset, cfg: SLAMConfig,
+             verbose: bool = False) -> SLAMResult:
+    """Deprecated: use :func:`repro.slam.session.run_sequence` (or the
+    session API directly).  Delegates with bitwise-identical results."""
+    warn_once(
+        "run_slam",
+        "run_slam(dataset, cfg) is deprecated; use "
+        "repro.slam.session.run_sequence(dataset, cfg) or the SlamSession "
+        "API (session_init/session_step/session_finalize) — see README "
+        "'SlamSession v1'.",
+        stacklevel=3,
     )
-    c2w = np.linalg.inv(f0.w2c_gt)
-    pts = x_cam @ c2w[:3, :3].T + c2w[:3, 3]
-    cols = f0.rgb[vv, uu]
-    n = min(len(pts), cfg.capacity // 2)
-    mean_scale = float(np.median(d)) / intr.fx * cfg.seed_stride
-    return G.from_points(
-        jnp.asarray(pts[:n]), jnp.asarray(np.clip(cols[:n], 0.02, 0.98)),
-        capacity=cfg.capacity, scale=mean_scale, opacity=cfg.seed_opacity,
-    )
-
-
-def _densify(g: G.GaussianField, frame, w2c_est: np.ndarray, rendered: np.ndarray,
-             intr: Intrinsics, cfg: SLAMConfig, rng: np.random.Generator) -> G.GaussianField:
-    """Add Gaussians where the current render misses observed geometry."""
-    err = np.abs(np.asarray(rendered) - frame.rgb).mean(-1)  # (H, W)
-    valid = frame.depth > 1e-3
-    score = err * valid
-    flat = np.argsort(-score.reshape(-1))[: cfg.densify_per_kf * 2]
-    flat = rng.permutation(flat)[: cfg.densify_per_kf]
-    vv, uu = np.unravel_index(flat, err.shape)
-    d = frame.depth[vv, uu]
-    ok = d > 1e-3
-    vv, uu, d = vv[ok], uu[ok], d[ok]
-    if len(d) == 0:
-        return g
-    x_cam = np.stack(
-        [(uu + 0.5 - intr.cx) / intr.fx * d, (vv + 0.5 - intr.cy) / intr.fy * d, d], -1
-    )
-    c2w = np.linalg.inv(w2c_est)
-    pts = x_cam @ c2w[:3, :3].T + c2w[:3, 3]
-    cols = np.clip(frame.rgb[vv, uu], 0.02, 0.98)
-    scale = float(np.median(d)) / intr.fx * 2.0
-    new = G.from_points(jnp.asarray(pts), jnp.asarray(cols),
-                        capacity=cfg.densify_per_kf, scale=scale, opacity=0.6)
-    return G.insert(g, new, max_new=cfg.densify_per_kf)
-
-
-def run_slam(dataset: SLAMDataset, cfg: SLAMConfig, verbose: bool = False) -> SLAMResult:
-    t0 = time.time()
-    intr = dataset.intrinsics
-    rng = np.random.default_rng(0)
-
-    engine = StepEngine(intr, cfg)
-    if cfg.downsample.enabled:
-        assert intr.height % 64 == 0 and intr.width % 64 == 0, (
-            "dynamic downsampling needs 64-divisible frames (16px tiles at "
-            "the 4x stage); got "
-            f"{intr.height}x{intr.width}"
-        )
-
-    g = _seed_map(dataset, cfg)
-    prune_cfg = cfg.prune
-    pstate = (
-        pruning.init_state(g, engine.stage(1).grid.num_tiles, prune_cfg)
-        if prune_cfg else None
-    )
-    masked = jnp.zeros((cfg.capacity,), bool)
-
-    pose = dataset.frames[0].w2c_gt.copy()
-    velocity = np.eye(4, dtype=np.float32)
-    est_w2c: List[np.ndarray] = [pose.copy()]
-    gt_w2c = [f.w2c_gt for f in dataset.frames]
-    keyframes: List[tuple] = []   # (rgb, depth, w2c_est np)
-    kf_psnr: List[float] = []
-    alive_per_frame: List[int] = []
-    work = WorkCounters()
-
-    map_opt = Adam(lr=cfg.lr_map)
-    map_opt_state = map_opt.init(G.params_of(g))
-
-    last_kf_idx = 0
-    last_kf_rgb = None
-
-    def cur_masked():
-        return pstate.masked if pstate is not None else masked
-
-    # --- frame 0: bootstrap mapping -------------------------------------
-    f0 = dataset.frames[0]
-    mres = engine.map_frame(g, map_opt_state, cur_masked(),
-                            [(f0.rgb, f0.depth, pose.copy())])
-    g, map_opt_state = mres.g, mres.opt_state
-    keyframes.append((f0.rgb, f0.depth, pose.copy()))
-    last_kf_rgb = f0.rgb
-    # The post-mapping eval render rides inside the mapping dispatch.
-    wsnap, alive0, img0 = engine.fetch((mres.work, g.num_alive(), mres.image))
-    work.absorb(wsnap)
-    kf_psnr.append(psnr_np(np.asarray(img0), f0.rgb))
-    work.frames += 1
-    alive_per_frame.append(int(alive0))
-
-    # --- main loop --------------------------------------------------------
-    for idx in range(1, dataset.num_frames):
-        frame = dataset.frames[idx]
-        d_since = idx - last_kf_idx
-
-        pre_kf = cfg.keyframe.is_keyframe(
-            idx, d_since, pose, keyframes[-1][2], frame.rgb, last_kf_rgb
-        ) if cfg.keyframe.kind in ("monogs", "photoslam", "splatam") else False
-        factor = side_factor(d_since, pre_kf, cfg.downsample)
-
-        # Constant-velocity pose prediction.
-        base = velocity @ pose
-        obs_rgb = jnp.asarray(downsample_image(jnp.asarray(frame.rgb), factor))
-        obs_depth = jnp.asarray(downsample_depth(jnp.asarray(frame.depth), factor))
-
-        if cfg.base_algo == "photoslam":
-            # Geometric (non-rendering) tracking — Photo-SLAM style.
-            prev = dataset.frames[idx - 1]
-            pts_w, cols, _, valid = geometric.backproject_grid(
-                jnp.asarray(prev.rgb), jnp.asarray(prev.depth),
-                jnp.asarray(est_w2c[-1]), intr, stride=4,
-            )
-            xi, wsnap = engine.geo_track_frame(
-                base, pts_w, cols, valid,
-                jnp.asarray(frame.rgb), jnp.asarray(frame.depth))
-        else:
-            tres = engine.track_frame(factor, g, pstate, cur_masked(), base,
-                                      obs_rgb, obs_depth)
-            xi, g, pstate, wsnap = tres.xi, tres.g, tres.pstate, tres.work
-
-        # The one per-frame device->host sync of the tracking phase: pose,
-        # alive count and the work-counter snapshot together.
-        new_pose_dev = lie.se3_exp(xi) @ jnp.asarray(base)
-        new_pose, alive_now, wsnap = engine.fetch(
-            (new_pose_dev, g.num_alive(), wsnap))
-        work.absorb(wsnap)
-        new_pose = np.asarray(new_pose)
-        velocity = (new_pose @ np.linalg.inv(pose)).astype(np.float32)
-        pose = new_pose
-        est_w2c.append(pose.copy())
-
-        is_kf = pre_kf if cfg.keyframe.kind != "gsslam" else cfg.keyframe.is_keyframe(
-            idx, d_since, pose, keyframes[-1][2], frame.rgb, last_kf_rgb
-        )
-
-        if is_kf:
-            # Mapping at full resolution (paper: keyframes keep R0).
-            rendered = np.asarray(engine.fetch(engine.render_eval(g, cur_masked(), pose)))
-            g = _densify(g, frame, pose, rendered, intr, cfg, rng)
-            map_opt_state = map_opt.init(G.params_of(g))  # fresh moments after insert
-            keyframes.append((frame.rgb, frame.depth, pose.copy()))
-            window = keyframes[-cfg.map_window:]
-            mres = engine.map_frame(g, map_opt_state, cur_masked(), window)
-            g, map_opt_state = mres.g, mres.opt_state
-            wsnap, alive_now, img = engine.fetch(
-                (mres.work, g.num_alive(), mres.image))
-            work.absorb(wsnap)
-            kf_psnr.append(psnr_np(np.asarray(img), frame.rgb))
-            last_kf_idx = idx
-            last_kf_rgb = frame.rgb
-
-        alive_per_frame.append(int(alive_now))
-        work.frames += 1
-        if verbose and idx % 10 == 0:
-            print(f"[{cfg.base_algo}] frame {idx}: kf={is_kf} factor={factor} "
-                  f"alive={alive_per_frame[-1]} psnr={kf_psnr[-1]:.2f}")
-
-    ate = ate_rmse(est_w2c, gt_w2c)
-    return SLAMResult(
-        est_w2c=est_w2c,
-        gt_w2c=gt_w2c,
-        keyframe_psnr=kf_psnr,
-        ate=ate,
-        work=work,
-        alive_per_frame=alive_per_frame,
-        wall_time_s=time.time() - t0,
-        prune_removed=int(pstate.removed) if pstate is not None else 0,
-        dispatches=engine.stats.dispatches,
-        syncs=engine.stats.syncs,
-    )
+    return run_sequence(dataset, cfg, verbose=verbose)

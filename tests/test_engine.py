@@ -19,7 +19,7 @@ from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
 from repro.slam.engine import StepEngine, _stage_key
-from repro.slam.runner import SLAMConfig, _seed_map, run_slam
+from repro.slam.session import SLAMConfig, _seed_map, run_sequence
 
 
 @pytest.fixture(scope="module")
@@ -54,8 +54,8 @@ def _fresh(tree):
 
 def test_fused_run_matches_unfused_with_pruning(scene):
     kw = dict(prune=PruneConfig(k0=3, step_frac=0.1))
-    fused = run_slam(scene, _cfg(fused=True, **kw))
-    loops = run_slam(scene, _cfg(fused=False, **kw))
+    fused = run_sequence(scene, _cfg(fused=True, **kw))
+    loops = run_sequence(scene, _cfg(fused=False, **kw))
 
     # Single-phase parity is exact to float noise (see the engine-level
     # tests below); across a whole run the noise feeds back through the

@@ -245,7 +245,7 @@ def test_plan_pytree_static_dynamic_split(tiny_scene):
 
 
 def test_static_fingerprint_rejects_arrays_and_covers_nested_fields():
-    from repro.slam.runner import SLAMConfig
+    from repro.slam.session import SLAMConfig
 
     base = SLAMConfig()
     fp = static_fingerprint(base)

@@ -231,7 +231,7 @@ def test_engine_schedule_mode_tracks_bit_exact():
     from repro.core.pruning import PruneConfig
     from repro.slam.datasets import make_dataset
     from repro.slam.engine import StepEngine
-    from repro.slam.runner import SLAMConfig, _seed_map
+    from repro.slam.session import SLAMConfig, _seed_map
 
     scene = make_dataset("room0", num_frames=2, height=64, width=64,
                          num_gaussians=300, frag_capacity=32)

@@ -1,0 +1,294 @@
+"""SlamSession v1 acceptance tests.
+
+(a) the ``run_slam``/``run_sequence`` wrappers are *exactly* a replay of
+    ``session_init`` + ``session_step`` + ``session_finalize`` — bitwise on
+    poses, PSNR, §4.1 boundaries and work counters, fused and unfused;
+(b) a vmapped/stacked ``step_many`` matches solo sessions bitwise per row,
+    including across a mid-stream :class:`SessionPool` swap, and an S=4
+    stack runs ONE executable and ONE dispatch per frame-step;
+(c) ``SlamSession`` round-trips through ``jax.tree_util`` and the step
+    compile-cache key is derived from static config only (dynamic leaves
+    can never produce a stale or duplicate executable).
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import raster_api
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.engine import EngineStats
+from repro.slam.runner import run_slam
+
+
+def _cfg(**kw):
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return S.SLAMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return make_dataset("room0", num_frames=5, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48)
+
+
+def _replay(scene, cfg):
+    stats = EngineStats()
+    sess = S.session_init(scene, cfg, stats=stats)
+    results = []
+    for f in scene.frames[1:]:
+        sess, r = S.session_step(sess, f, stats=stats)
+        results.append(jax.device_get(r))
+    fin = S.session_finalize(sess, gt_w2c=[f.w2c_gt for f in scene.frames],
+                             stats=stats)
+    return sess, results, fin
+
+
+@pytest.fixture(scope="module")
+def replay_fused(scene):
+    return _replay(scene, _cfg(fused=True))
+
+
+@pytest.fixture(scope="module")
+def replay_unfused(scene):
+    return _replay(scene, _cfg(fused=False))
+
+
+def _work_tuple(w):
+    return (int(w.fragments), int(w.pixels), int(w.gaussians_iters),
+            int(w.iterations))
+
+
+def _assert_result_bitwise(a, b):
+    assert np.array_equal(np.stack(a.est_w2c), np.stack(b.est_w2c))
+    assert a.keyframe_psnr == b.keyframe_psnr
+    assert a.alive_per_frame == b.alive_per_frame
+    assert _work_tuple(a.work) == _work_tuple(b.work)
+    assert a.work.frames == b.work.frames
+    assert a.prune_removed == b.prune_removed
+
+
+# ---------------------------------------------------------------------------
+# (a) wrapper == session replay, bitwise, fused and unfused
+# ---------------------------------------------------------------------------
+
+def test_run_sequence_is_session_replay_fused(scene, replay_fused):
+    _, _, fin = replay_fused
+    res = S.run_sequence(scene, _cfg(fused=True))
+    _assert_result_bitwise(res, fin)
+
+
+def test_run_sequence_is_session_replay_unfused(scene, replay_unfused):
+    _, _, fin = replay_unfused
+    res = S.run_sequence(scene, _cfg(fused=False))
+    _assert_result_bitwise(res, fin)
+
+
+def test_run_slam_compat_wrapper_bitwise(scene, replay_fused):
+    _, _, fin = replay_fused
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = run_slam(scene, _cfg(fused=True))
+    _assert_result_bitwise(res, fin)
+
+
+def test_fused_unfused_boundaries_and_work_match(replay_fused, replay_unfused):
+    """§4.1 interval boundaries fire at the same iterations and the work
+    counters agree exactly between the one-dispatch step and the
+    per-iteration oracle."""
+    _, res_f, fin_f = replay_fused
+    _, res_u, fin_u = replay_unfused
+    for rf, ru in zip(res_f, res_u):
+        np.testing.assert_array_equal(np.asarray(rf.fired), np.asarray(ru.fired))
+        assert bool(rf.is_kf) == bool(ru.is_kf)
+        assert _work_tuple(rf.work) == _work_tuple(ru.work)
+    assert np.asarray(res_f[-1].fired).any()  # k0=2 over 3 iters must fire
+    assert _work_tuple(fin_f.work) == _work_tuple(fin_u.work)
+    np.testing.assert_allclose(np.stack(fin_f.est_w2c),
+                               np.stack(fin_u.est_w2c), atol=2e-3)
+    np.testing.assert_allclose(fin_f.keyframe_psnr, fin_u.keyframe_psnr,
+                               atol=0.2)
+    # the point of the fused step: far fewer dispatches/syncs
+    assert fin_f.dispatches * 2 < fin_u.dispatches
+    assert fin_f.syncs * 4 < fin_u.syncs
+
+
+def test_run_slam_emits_exactly_one_deprecation_warning(scene):
+    raster_api._WARNED_KEYS.discard("run_slam")
+    cfg = _cfg(fused=True)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        run_slam(scene, cfg)
+        run_slam(scene, cfg)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "run_slam" in str(w.message)]
+    assert len(dep) == 1, f"expected exactly one warning, got {len(dep)}"
+
+
+# ---------------------------------------------------------------------------
+# (b) stacked step_many == solo sessions bitwise, incl. mid-stream pool swap
+# ---------------------------------------------------------------------------
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        eq = (np.array_equal(x, y, equal_nan=True)
+              if np.issubdtype(x.dtype, np.floating) else np.array_equal(x, y))
+        if not eq:
+            return False
+    return True
+
+
+@pytest.fixture(scope="module")
+def trio():
+    cfg = _cfg(fused=True)
+    scenes = [make_dataset(n, num_frames=5, height=48, width=64,
+                           num_gaussians=400, frag_capacity=48, seed=i)
+              for i, n in enumerate(("room0", "room1", "hall0"))]
+    return cfg, scenes
+
+
+def test_step_many_matches_solo_bitwise_with_pool_swap(trio):
+    cfg, scenes = trio
+    ds_a, ds_b, ds_c = scenes
+
+    def solo(ds, n_steps):
+        sess = S.session_init(ds, cfg)
+        for t in range(1, n_steps + 1):
+            sess, _ = S.session_step(sess, ds.frames[t])
+        return sess
+
+    pool = S.SessionPool([S.session_init(ds_a, cfg), S.session_init(ds_b, cfg),
+                          S.session_init(ds_c, cfg)])
+    for t in (1, 2):
+        pool.step([ds.frames[t] for ds in scenes])
+
+    # mid-stream swap: retire stream B, admit a fresh stream on its row
+    ds_b2 = make_dataset("desk0", num_frames=5, height=48, width=64,
+                         num_gaussians=400, frag_capacity=48, seed=7)
+    retired = pool.swap(1, S.session_init(ds_b2, cfg))
+    assert _leaves_equal(retired, solo(ds_b, 2))
+
+    live = [ds_a, ds_b2, ds_c]
+    pool.step([ds_a.frames[3], ds_b2.frames[1], ds_c.frames[3]])
+    pool.step([ds_a.frames[4], ds_b2.frames[2], ds_c.frames[4]])
+
+    for slot, (ds, steps) in enumerate([(ds_a, 4), (ds_b2, 2), (ds_c, 4)]):
+        assert _leaves_equal(pool.session(slot), solo(ds, steps)), (
+            f"slot {slot} ({ds.name}) diverged from its solo run")
+
+
+def test_s4_stack_shares_one_executable_one_dispatch(trio):
+    cfg, scenes = trio
+    ds = scenes[0]
+    solos = [S.session_init(ds, cfg, seed=i) for i in range(4)]
+    pool = S.SessionPool(solos)
+    key = S.session_step_key(pool.stacked)
+    n_steps = 3
+    cache_before = len(S._STEP_CACHE)
+    for t in range(1, n_steps + 1):
+        res = pool.step([ds.frames[t]] * 4)
+    # ONE dispatch per frame-step for the whole S=4 stack …
+    assert pool.stats.dispatches == n_steps
+    # … through ONE cached executable (the first step added at most one)
+    assert key in S._STEP_CACHE
+    assert len(S._STEP_CACHE) <= cache_before + 1
+    # dispatches/frame-step for S=4 must be <= 1.25x the S=1 value
+    solo_stats = EngineStats()
+    sess = S.session_init(ds, cfg, seed=0, stats=solo_stats)
+    boot = solo_stats.dispatches
+    for t in range(1, n_steps + 1):
+        sess, solo_res = S.session_step(sess, ds.frames[t], stats=solo_stats)
+    solo_per_frame = (solo_stats.dispatches - boot) / n_steps
+    assert pool.stats.dispatches / n_steps <= 1.25 * solo_per_frame
+    # per-row DeviceWork counters match the solo run exactly (every stream
+    # did the same on-device work it would have done alone)
+    assert _work_tuple(jax.tree.map(lambda x: x[0], res.work)) == \
+        _work_tuple(solo_res.work)
+    assert _leaves_equal(pool.session(0), sess)
+
+
+def test_step_many_rejects_unfused_and_downsample(trio):
+    cfg, scenes = trio
+    ds = scenes[0]
+    from repro.core.downsample import DownsampleConfig
+    stack = S.stack_sessions([S.session_init(ds, cfg) for _ in range(2)])
+    with pytest.raises(ValueError, match="stacked"):
+        S.session_step(stack, ds.frames[1])
+    with pytest.raises(ValueError, match="solo"):
+        S.session_finalize(stack)
+    cfg_u = _cfg(fused=False)
+    stack_u = S.stack_sessions([S.session_init(ds, cfg_u) for _ in range(2)])
+    with pytest.raises(ValueError, match="fused"):
+        S.step_many(stack_u, [ds.frames[1]] * 2)
+    cfg_d = _cfg(downsample=DownsampleConfig(enabled=True))
+    stack_d = dataclasses.replace(
+        S.stack_sessions([S.session_init(ds, cfg) for _ in range(2)]),
+        meta=S.SessionMeta(cfg_d, ds.intrinsics))
+    with pytest.raises(ValueError, match="downsampling"):
+        S.step_many(stack_d, [ds.frames[1]] * 2)
+
+
+# ---------------------------------------------------------------------------
+# (c) pytree round-trip + static-only compile key
+# ---------------------------------------------------------------------------
+
+def test_session_pytree_roundtrip(scene):
+    sess = S.session_init(scene, _cfg(fused=True))
+    leaves, treedef = jax.tree.flatten(sess)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(rebuilt, S.SlamSession)
+    assert rebuilt.meta == sess.meta
+    assert rebuilt.meta.cfg is sess.meta.cfg   # aux carries the config
+    assert _leaves_equal(rebuilt, sess)
+    # sessions are mappable like any pytree
+    doubled = jax.tree.map(lambda x: x, sess)
+    assert _leaves_equal(doubled, sess)
+
+
+def test_step_cache_key_ignores_dynamic_leaves(scene):
+    cfg = _cfg(fused=True)
+    a = S.session_init(scene, cfg, seed=0)
+    b, _ = S.session_step(S.session_init(scene, cfg, seed=3), scene.frames[1])
+    # two sessions in arbitrary dynamic states share one step executable
+    assert S.session_step_key(a) == S.session_step_key(b)
+    # …while any static-config change re-keys (static_fingerprint covers
+    # every field, present and future)
+    alt = S.session_init(scene, dataclasses.replace(cfg, iters_track=4))
+    assert S.session_step_key(alt) != S.session_step_key(a)
+    assert S.session_step_key(a, factor=2) != S.session_step_key(a, factor=1)
+    assert S.session_step_key(a, batch=4) != S.session_step_key(a, batch=None)
+
+
+def test_stack_sessions_requires_matching_static_config(scene):
+    a = S.session_init(scene, _cfg(fused=True))
+    b = S.session_init(scene, _cfg(fused=True, iters_map=5))
+    with pytest.raises(ValueError, match="static config"):
+        S.stack_sessions([a, b])
+
+
+# ---------------------------------------------------------------------------
+# satellite: dataset scene registry error style
+# ---------------------------------------------------------------------------
+
+def test_unknown_scene_error_lists_registered_scenes():
+    from repro.slam.datasets import registered_scenes
+    with pytest.raises(ValueError, match="registered scenes"):
+        make_dataset("atrium9", num_frames=2, height=48, width=64,
+                     num_gaussians=64)
+    for name in registered_scenes():
+        assert name in ("room0", "room1", "hall0", "desk0")

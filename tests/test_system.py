@@ -11,7 +11,7 @@ from repro.core.downsample import DownsampleConfig
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
-from repro.slam.runner import SLAMConfig, run_slam
+from repro.slam.session import SLAMConfig, run_sequence
 
 
 @pytest.fixture(scope="module")
@@ -30,7 +30,7 @@ def _cfg(**kw):
 
 
 def test_monogs_baseline_tracks_and_maps(mini_dataset):
-    res = run_slam(mini_dataset, _cfg())
+    res = run_sequence(mini_dataset, _cfg())
     assert res.ate < 0.30, f"ATE {res.ate*100:.1f}cm too high"
     assert res.mean_psnr > 17.0, f"PSNR {res.mean_psnr:.1f}dB too low"
     assert len(res.est_w2c) == mini_dataset.num_frames
@@ -39,8 +39,8 @@ def test_monogs_baseline_tracks_and_maps(mini_dataset):
 def test_rtgs_full_reduces_work_keeps_quality(mini_dataset):
     """RTGS (pruning + downsampling) must reduce algorithmic work while
     keeping ATE/PSNR in the same regime (paper: <5-10% degradation)."""
-    base = run_slam(mini_dataset, _cfg())
-    ours = run_slam(mini_dataset, _cfg(
+    base = run_sequence(mini_dataset, _cfg())
+    ours = run_sequence(mini_dataset, _cfg(
         prune=PruneConfig(k0=5, step_frac=0.08),
         downsample=DownsampleConfig(enabled=True),
     ))
@@ -59,7 +59,7 @@ def test_rtgs_full_reduces_work_keeps_quality(mini_dataset):
     ("splatam", KeyframePolicy(kind="splatam")),
 ])
 def test_other_base_algorithms_run(mini_dataset, algo, policy):
-    res = run_slam(mini_dataset, _cfg(base_algo=algo, keyframe=policy,
+    res = run_sequence(mini_dataset, _cfg(base_algo=algo, keyframe=policy,
                                       iters_track=8, iters_map=10))
     assert np.isfinite(res.ate)
     assert res.ate < 0.6
@@ -67,7 +67,7 @@ def test_other_base_algorithms_run(mini_dataset, algo, policy):
 
 
 def test_splatam_maps_every_frame(mini_dataset):
-    res = run_slam(
+    res = run_sequence(
         mini_dataset,
         _cfg(base_algo="splatam", keyframe=KeyframePolicy(kind="splatam"),
              iters_track=6, iters_map=8),
