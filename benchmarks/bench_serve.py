@@ -1,0 +1,179 @@
+"""SlamServe: device-sharded, queue-fed serving across D devices.
+
+PR 4's ``step_many`` made S sessions cost ONE dispatch per frame-step on
+one device; SlamServe shards those S session rows over a D-device "data"
+mesh and feeds them through the asynchronous FrameQueue/SlamServer
+pipeline.  This benchmark measures the serving tier per device count —
+frames/s, dispatches and syncs per frame-step (the hardware-independent
+metrics: on this container the "devices" are forced host-platform slices
+of one CPU core, so wall clock does NOT improve with D), and mean queue
+wait — and appends a ``"serve"`` row to ``BENCH_slam.json``.
+
+Device counts need ``--xla_force_host_platform_device_count`` set before
+JAX initializes, so each D runs in its own worker subprocess (the
+tests/test_multidevice.py pattern); the parent aggregates the workers'
+JSON lines.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only serve
+  or: PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+"""
+
+from __future__ import annotations
+
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+_RESULT_TAG = "SERVE_RESULT "
+
+
+def _worker(devices: int, sessions: int, num_frames: int) -> None:
+    """Runs inside a subprocess with D forced host devices: time one
+    serving epoch of S streams through ShardedPool + SlamServer."""
+    import time
+
+    import jax
+
+    from repro.core.keyframes import KeyframePolicy
+    from repro.launch.mesh import make_data_mesh
+    from repro.slam.datasets import make_dataset, registered_scenes
+    from repro.slam.server import ShardedPool, SlamServer
+    from repro.slam.session import SLAMConfig, session_init
+
+    assert len(jax.devices()) >= devices, (len(jax.devices()), devices)
+    cfg = SLAMConfig(iters_track=3, iters_map=4, capacity=1024,
+                     frag_capacity=48, map_window=2, scan_unroll=1,
+                     keyframe=KeyframePolicy(kind="monogs", interval=3))
+    names = registered_scenes()
+    dss = [make_dataset(names[i % len(names)], num_frames=num_frames,
+                        height=48, width=64, num_gaussians=400,
+                        frag_capacity=48, seed=i) for i in range(sessions)]
+    steps = num_frames - 1
+
+    def epoch():
+        pool = ShardedPool([session_init(ds, cfg) for ds in dss],
+                           mesh=make_data_mesh(devices))
+        srv = SlamServer(pool, queue_depth=2)
+        t0 = time.time()
+        for t in range(1, num_frames):
+            for slot, ds in enumerate(dss):
+                srv.submit(slot, ds.frames[t])
+            srv.pump()          # async dispatch; staging overlaps compute
+        srv.drain()             # the one sync
+        return pool, srv, time.time() - t0
+
+    epoch()                     # warm-up epoch compiles the executables
+    pool, srv, wall = epoch()   # steady state
+
+    assert pool.stats.dispatches == steps, (pool.stats.dispatches, steps)
+    run_syncs = pool.stats.syncs          # the drain (finalize fetches are
+                                          # per-retiree, not per-run — keep
+                                          # them out of the run metric)
+    fins = [pool.finalize(i, gt_w2c=[f.w2c_gt for f in dss[i].frames])
+            for i in range(sessions)]
+    print(_RESULT_TAG + json.dumps({
+        "devices": devices,
+        "sessions": sessions,
+        "frame_steps": steps,
+        "wall_s": round(wall, 3),
+        "frames_per_s": round(sessions * steps / max(wall, 1e-9), 3),
+        "dispatches_per_frame_step": round(pool.stats.dispatches / steps, 3),
+        "syncs_per_frame_step": round(run_syncs / steps, 3),
+        "syncs_per_run": run_syncs,
+        "queue_wait_ms_per_frame": round(srv.stats.queue_wait_ms_per_frame, 3),
+        "stage_s": round(srv.stats.stage_s, 3),
+        "ate_cm": [round(f.ate * 100, 2) for f in fins],
+        "psnr_db": [round(f.mean_psnr, 2) for f in fins],
+    }))
+
+
+def _spawn(devices: int, sessions: int, num_frames: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serve", "--worker",
+         "--devices", str(devices), "--sessions", str(sessions),
+         "--frames", str(num_frames)],
+        capture_output=True, text=True, env=env, timeout=1800,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"serve worker (D={devices}) failed:\n{out.stdout}\n"
+            f"{out.stderr[-3000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith(_RESULT_TAG):
+            return json.loads(line[len(_RESULT_TAG):])
+    raise RuntimeError(f"serve worker (D={devices}) emitted no result line:"
+                       f"\n{out.stdout}")
+
+
+def run(quick: bool = True, out: str = "BENCH_slam.json"):
+    from benchmarks.common import emit
+
+    device_counts = (1, 2) if quick else (1, 2, 4)
+    sessions = 4 if quick else 8
+    num_frames = 4 if quick else 8
+
+    rows = {}
+    for d in device_counts:
+        r = _spawn(d, sessions, num_frames)
+        rows[f"D{d}"] = r
+        emit(f"serve/D{d}",
+             1e6 / max(r["frames_per_s"], 1e-9),
+             f"disp_per_step={r['dispatches_per_frame_step']};"
+             f"syncs_per_step={r['syncs_per_frame_step']};"
+             f"queue_wait_ms={r['queue_wait_ms_per_frame']}")
+
+    # The serving invariant: dispatches/frame-step == 1.0 for every device
+    # count (each worker also asserts it in-process).
+    for key, r in rows.items():
+        assert r["dispatches_per_frame_step"] == 1.0, (key, r)
+
+    summary = {
+        "mode": "quick" if quick else "full",
+        "scene_hw": [48, 64],
+        "sessions": sessions,
+        "dispatches_per_frame_step": 1.0,
+        "rows": rows,
+    }
+
+    # Amend (don't clobber) the slam_fps/wsu/sessions report.
+    report = {}
+    if os.path.exists(out):
+        with open(out) as fh:
+            report = json.load(fh)
+    report["serve"] = summary
+    with open(out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_slam.json")
+    ap.add_argument("--worker", action="store_true",
+                    help="(internal) run one device-count measurement in "
+                         "this process; requires XLA_FLAGS set by the "
+                         "parent")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--sessions", type=int, default=4)
+    ap.add_argument("--frames", type=int, default=4)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--full", action="store_true")
+    mode.add_argument("--quick", action="store_true",
+                      help="quick mode (the default; spelled out for CI "
+                           "smoke jobs)")
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.devices, args.sessions, args.frames)
+    else:
+        run(quick=not args.full, out=args.out)

@@ -21,6 +21,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_serve,
         bench_sessions,
         bench_slam_fps,
         bench_wsu,
@@ -40,10 +41,11 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline_table.run,
         "slam_fps": bench_slam_fps.run,
-        # after slam_fps: wsu + sessions amend the BENCH_slam.json it
-        # (re)writes
+        # after slam_fps: wsu + sessions + serve amend the BENCH_slam.json
+        # it (re)writes
         "wsu": bench_wsu.run,
         "sessions": bench_sessions.run,
+        "serve": bench_serve.run,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -25,6 +25,20 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_data_mesh(num_devices: int | None = None):
+    """1-D serving mesh over the first ``num_devices`` local devices (all
+    of them by default), single axis ``"data"`` — the axis SlamServe's
+    :class:`~repro.slam.server.ShardedPool` lays session rows out on."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"need 1 <= num_devices <= {len(devs)}, got {n}")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
 def dp_axes(mesh) -> tuple:
     """Data-parallel axes: ('pod', 'data') when a pod axis exists."""
     names = mesh.axis_names

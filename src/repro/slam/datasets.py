@@ -11,6 +11,11 @@ the paper's multi-scene evaluation; 'desk0' is a cluttered close-range
 corner whose per-tile fragment load is heavily skewed (most geometry piles
 into a few tiles while the walls stay sparse) — the workload shape the WSU's
 pairwise scheduling exists for, and what real TUM/Replica frames look like.
+'stairs0' is a staircase receding from the camera: most of the geometry
+crowds the near treads at the bottom of the image while the upper half is
+a sparse distant landing — strong depth AND occupancy skew, so a sharded
+serving pool mixing it with room scenes exercises genuinely heterogeneous
+per-row workloads.
 """
 
 from __future__ import annotations
@@ -93,10 +98,63 @@ def _desk_points(key, n: int):
     return pts, jnp.clip(cols, 0.02, 0.98)
 
 
+def _stairs_points(key, n: int):
+    """'stairs0': a staircase climbing away from the camera.  Geometry is
+    allocated quadratically toward the near steps (the bottom tread gets
+    ~9x the top one), with a sparse landing wall far behind — per-tile
+    occupancy piles into the lower image rows and depth spans ~1.5-5m in
+    one view, the strongest depth/occupancy skew of the registry."""
+    ks = jax.random.split(key, 4)
+    n_wall = n // 8
+    n_steps = n - n_wall
+    k_steps = 6
+
+    # Quadratic near-step bias: step k (0 = nearest) gets ~(K-k)^2 weight.
+    w = np.array([(k_steps - k) ** 2 for k in range(k_steps)], np.float64)
+    counts = np.floor(n_steps * w / w.sum()).astype(int)
+    counts[0] += n_steps - int(counts.sum())
+
+    pts_parts, col_parts = [], []
+    for k in range(k_steps):
+        m = int(counts[k])
+        kk = jax.random.fold_in(ks[0], k)
+        u = jax.random.uniform(kk, (m, 2), minval=0.0, maxval=1.0)
+        z0, y0 = 1.5 + 0.55 * k, 1.5 - 0.28 * k
+        # Half tread (horizontal, y = y0), half riser (vertical, z = z0).
+        m_t = m // 2
+        tread = jnp.stack([(u[:m_t, 0] - 0.5) * 3.2,
+                           jnp.full((m_t,), y0),
+                           z0 + u[:m_t, 1] * 0.55], -1)
+        riser = jnp.stack([(u[m_t:, 0] - 0.5) * 3.2,
+                           y0 + u[m_t:, 1] * 0.28,
+                           jnp.full((m - m_t,), z0)], -1)
+        p = jnp.concatenate([tread, riser], 0)
+        stripes = (jnp.floor(p[:, 0] * 4) % 2)
+        shade = 0.35 + 0.09 * k
+        col = jnp.stack([shade + 0.25 * stripes,
+                         jnp.full((m,), 0.3 + 0.05 * k),
+                         jnp.full((m,), 0.65 - 0.06 * k)], -1)
+        pts_parts.append(p)
+        col_parts.append(col)
+
+    # Sparse landing wall behind the top step.
+    xy = jax.random.uniform(ks[1], (n_wall, 2), minval=-2.0, maxval=2.0)
+    wall = jnp.stack([xy[:, 0] * 0.8, xy[:, 1] * 0.6 - 0.4,
+                      jnp.full((n_wall,), 5.0)], -1)
+    wall_col = jnp.stack([jnp.full((n_wall,), 0.6),
+                          0.5 + 0.1 * xy[:, 1],
+                          jnp.full((n_wall,), 0.45)], -1)
+
+    pts = jnp.concatenate(pts_parts + [wall], axis=0)
+    cols = jnp.concatenate(col_parts + [wall_col], axis=0)
+    noise = 0.008 * jax.random.normal(ks[2], pts.shape)
+    return pts + noise, jnp.clip(cols, 0.02, 0.98)
+
+
 # Registered synthetic scenes (mirrors the raster backend registry's error
 # style: unknown names raise listing what exists instead of a bare KeyError
 # or a silent fallback to room0's geometry).
-SCENES: tuple = ("room0", "room1", "hall0", "desk0")
+SCENES: tuple = ("room0", "room1", "hall0", "desk0", "stairs0")
 
 
 def registered_scenes() -> tuple:
@@ -107,6 +165,8 @@ def _surface_points(key, name: str, n: int):
     """Sample points + colors on a procedural room's surfaces."""
     if name.startswith("desk"):
         return _desk_points(key, n)
+    if name.startswith("stairs"):
+        return _stairs_points(key, n)
     ks = jax.random.split(key, 8)
     quarters = n // 4
 

@@ -64,6 +64,17 @@ from repro.slam.metrics import DeviceWork, device_work_add, device_work_zero
 from repro.train.optimizer import Adam, AdamState, apply_updates
 
 
+def _donate_kwargs(*argnames) -> dict:
+    """``jax.jit`` donation kwargs for the named arguments — empty on
+    XLA:CPU, which doesn't implement buffer donation (donating there only
+    produces warnings).  Every jit that wants to donate carried state
+    (scan bundles, session steps, the sharded serving pool) must build its
+    kwargs through this helper instead of hand-writing the backend guard."""
+    if jax.default_backend() == "cpu":
+        return {}
+    return {"donate_argnames": argnames}
+
+
 def silence(g: G.GaussianField, masked: jnp.ndarray) -> G.GaussianField:
     """Mask-pruned or dead Gaussians render as nothing (cached fragment
     lists may still reference them until the next rebuild)."""
@@ -179,9 +190,7 @@ class _Stage:
         self.pixels = self.intr.height * self.intr.width
         self.cfg = cfg
 
-        donate = {} if jax.default_backend() == "cpu" else {
-            "donate_argnames": ("g", "pstate", "work")
-        }
+        donate = _donate_kwargs("g", "pstate", "work")
         self.build = jax.jit(self._build_core)
         self.track_iter = jax.jit(self._track_iter_core)
         self.map_iter = jax.jit(self._map_iter_core)
@@ -189,9 +198,7 @@ class _Stage:
         self.track_scan_noprune = jax.jit(self._track_scan_noprune)
         if cfg.prune is not None:
             self.track_scan_prune = jax.jit(self._track_scan_prune, **donate)
-        donate_map = {} if jax.default_backend() == "cpu" else {
-            "donate_argnames": ("g", "opt_state", "work")
-        }
+        donate_map = _donate_kwargs("g", "opt_state", "work")
         self.map_scan = jax.jit(self._map_scan, **donate_map)
         self.map_scan_masked = jax.jit(self._map_scan_masked, **donate_map)
 

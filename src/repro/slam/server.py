@@ -1,0 +1,404 @@
+"""SlamServe — device-sharded, queue-fed multi-session SLAM serving tier.
+
+SlamSession v1 (PR 4) collapsed S concurrent streams into one stacked
+pytree and ONE dispatch per frame-step — but only on a single device, fed
+by a synchronous host loop.  This module is the serving layer above it:
+
+* :class:`ShardedPool` lays the stacked session's rows out across a device
+  mesh with ``NamedSharding`` on the ``"data"`` axis (the
+  ``launch/mesh.py`` + ``distributed/sharding.py`` conventions), so the
+  same single ``step_many`` executable serves S sessions on D devices with
+  donated state buffers.  Per-row computation is the identical trace as a
+  solo :func:`~repro.slam.session.session_step` (the jitted function comes
+  from :func:`~repro.slam.session.make_many_step`, shared with
+  ``step_many``), so **every row stays bitwise-equal to its solo run** —
+  sharding changes where rows compute, never what they compute
+  (tests/test_serve.py proves it on a forced 8-device host).
+
+* :class:`FrameQueue` + :class:`SlamServer` form the asynchronous host
+  pipeline: per-stream bounded ingest queues with backpressure, a
+  dispatcher that stages each lockstep frame batch onto the row sharding
+  and fires the step **asynchronously** (JAX async dispatch returns as
+  soon as the work is enqueued), so host staging of batch t+1 overlaps
+  device compute of batch t.  The host blocks on the device only in
+  :meth:`SlamServer.drain` / ``finalize`` — the ~1 sync/run property of
+  the session tier survives the serving tier.
+
+* Admission control: :meth:`SlamServer.admit` / :meth:`SlamServer.retire`
+  swap pytree rows in place across the shards mid-stream (one cached
+  slot-traced executable), so heterogeneous scenes run concurrently and
+  finished streams hand their slots to waiting ones.  A full pool raises
+  :class:`PoolFull` — admission backpressure — and full ingest queues
+  push back through :meth:`SlamServer.submit`.
+
+Free slots (retired, not yet re-admitted) keep stepping on blank frames —
+the stacked executable is lockstep by construction — and their row state
+is scratch until the next ``admit`` overwrites every leaf.
+
+Serving constraints are the session tier's
+(:func:`~repro.slam.session.require_servable`): ``cfg.fused=True``,
+downsampling off; additionally S must divide evenly over the mesh's
+``"data"`` axis.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import to_shardings
+from repro.launch.mesh import axis_size, make_data_mesh
+from repro.slam.engine import EngineStats, _donate_kwargs
+from repro.slam.session import (
+    Observation,
+    SLAMResult,
+    SlamSession,
+    StepResult,
+    make_many_step,
+    require_servable,
+    session_finalize,
+    session_row,
+    session_step_key,
+    stack_observations,
+    stack_sessions,
+    validate_admission,
+)
+
+
+class PoolFull(RuntimeError):
+    """Admission backpressure: every slot is live; retire one first."""
+
+
+class QueueFull(RuntimeError):
+    """Ingest backpressure: a stream is ahead of its lockstep peers and
+    its bounded queue cannot absorb more frames."""
+
+
+# ---------------------------------------------------------------------------
+# the sharded device pool
+# ---------------------------------------------------------------------------
+
+_SERVE_STEP_CACHE: dict = {}
+_SERVE_SWAP_CACHE: dict = {}
+
+
+class ShardedPool:
+    """S stacked sessions laid out over D devices, stepped by ONE dispatch.
+
+    The stacked :class:`SlamSession` pytree is placed with
+    ``NamedSharding(mesh, P("data"))`` on every leaf's leading S axis, so
+    each device owns S/D complete session rows.  :meth:`step` runs the
+    shared ``make_many_step`` trace under those shardings (session state
+    buffers donated where the backend supports it) — one executable, one
+    dispatch per frame-step, rows bitwise-equal to single-device
+    ``step_many``.  :meth:`swap` is the admission tier's device op: replace
+    one row across the shards via a slot-traced cached executable.
+    """
+
+    def __init__(self, sessions: Sequence[SlamSession], mesh=None):
+        sessions = list(sessions)
+        if not sessions:
+            raise ValueError("ShardedPool needs at least one session")
+        self.mesh = mesh if mesh is not None else make_data_mesh()
+        if "data" not in self.mesh.axis_names:
+            raise ValueError("ShardedPool mesh needs a 'data' axis; got "
+                             f"axes {self.mesh.axis_names}")
+        d = axis_size(self.mesh, "data")
+        if len(sessions) % d != 0:
+            raise ValueError(
+                f"pool size {len(sessions)} must divide evenly over the "
+                f"{d}-device 'data' axis (rows shard whole, never split)")
+        require_servable(sessions[0].meta.cfg, what="ShardedPool")
+        # One NamedSharding, applied to every leaf as a pytree prefix:
+        # leading S axis on "data", everything else replicated within a row.
+        self.sharding = to_shardings(self.mesh, P("data"))
+        self._stacked = jax.device_put(stack_sessions(sessions),
+                                       self.sharding)
+        self.stats = EngineStats()     # step dispatches / result syncs
+        self.admin_dispatches = 0      # admit/retire row swaps
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def size(self) -> int:
+        return self._stacked.batch
+
+    @property
+    def num_devices(self) -> int:
+        return axis_size(self.mesh, "data")
+
+    @property
+    def meta(self):
+        return self._stacked.meta
+
+    @property
+    def stacked(self) -> SlamSession:
+        return self._stacked
+
+    def session(self, slot: int) -> SlamSession:
+        """Row ``slot`` as a solo session (lazy gather across shards)."""
+        return session_row(self._stacked, slot)
+
+    def _cache_key(self):
+        # Mesh structure matters, not just the device set: the same devices
+        # reshaped under different axes produce different NamedShardings,
+        # and the jitted executables bake self.sharding in.
+        dev_ids = tuple(int(dv.id) for dv in self.mesh.devices.flat)
+        return (dev_ids, self.mesh.devices.shape, self.mesh.axis_names,
+                session_step_key(self.meta, 1, self.size))
+
+    # -- the data plane ----------------------------------------------------
+
+    def stage(self, frames) -> Observation:
+        """Host→device staging of one lockstep frame batch onto the row
+        sharding.  Asynchronous: overlaps any in-flight step dispatch."""
+        obs = stack_observations(frames, self.size)
+        return jax.device_put(obs, self.sharding)
+
+    def step(self, frames) -> StepResult:
+        """Advance all S rows by one frame: ONE dispatch of the shared
+        sharded executable.  ``frames`` is S per-row frames or an already
+        :meth:`stage`-d ``Observation``."""
+        obs = self.stage(frames)
+        key = ("serve-step",) + self._cache_key()
+        if key not in _SERVE_STEP_CACHE:
+            _SERVE_STEP_CACHE[key] = jax.jit(
+                make_many_step(self.meta, self.size),
+                in_shardings=(self.sharding, self.sharding),
+                out_shardings=(self.sharding, self.sharding),
+                **_donate_kwargs("stacked"))
+        self.stats.dispatches += 1
+        self._stacked, res = _SERVE_STEP_CACHE[key](self._stacked, obs)
+        return res
+
+    # -- the control plane -------------------------------------------------
+
+    def swap(self, slot: int, new_session: SlamSession) -> SlamSession:
+        """Replace row ``slot`` across the shards with ``new_session`` and
+        return the retired row as a solo session.  One cached slot-traced
+        executable serves every slot (counted in ``admin_dispatches``, not
+        the per-frame-step ``stats``)."""
+        validate_admission(new_session, self._stacked)
+        key = ("serve-swap",) + self._cache_key()
+        if key not in _SERVE_SWAP_CACHE:
+            def swap(stacked, row, slot_ix):
+                old = jax.tree.map(
+                    lambda buf: jax.lax.dynamic_index_in_dim(
+                        buf, slot_ix, 0, keepdims=False), stacked)
+                new = jax.tree.map(
+                    lambda buf, r: jax.lax.dynamic_update_index_in_dim(
+                        buf, r, slot_ix, 0), stacked, row)
+                return new, old
+
+            _SERVE_SWAP_CACHE[key] = jax.jit(
+                swap,
+                in_shardings=(self.sharding, None, None),
+                out_shardings=(self.sharding, None),
+                **_donate_kwargs("stacked"))
+        self.admin_dispatches += 1
+        self._stacked, old = _SERVE_SWAP_CACHE[key](
+            self._stacked, new_session, jnp.asarray(slot, jnp.int32))
+        return old
+
+    def finalize(self, slot: int, gt_w2c=None, **kw) -> SLAMResult:
+        return session_finalize(self.session(slot), gt_w2c=gt_w2c,
+                                stats=self.stats, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the host-side frame pipeline
+# ---------------------------------------------------------------------------
+
+
+class FrameQueue:
+    """Bounded per-slot frame staging queues (host memory only).
+
+    ``put`` returns ``False`` when a slot's queue is at depth — the
+    caller's backpressure signal.  Enqueue timestamps ride along so the
+    dispatcher can account queue wait (time a frame sat queued before its
+    lockstep batch dispatched)."""
+
+    def __init__(self, slots: int, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._q: List[collections.deque] = [
+            collections.deque() for _ in range(slots)]
+
+    def put(self, slot: int, frame) -> bool:
+        q = self._q[slot]
+        if len(q) >= self.depth:
+            return False
+        q.append((frame, time.monotonic()))
+        return True
+
+    def pop(self, slot: int):
+        """Oldest queued ``(frame, waited_s)`` for ``slot``."""
+        frame, t0 = self._q[slot].popleft()
+        return frame, time.monotonic() - t0
+
+    def fill(self, slot: int) -> int:
+        return len(self._q[slot])
+
+    def clear(self, slot: int) -> int:
+        n = len(self._q[slot])
+        self._q[slot].clear()
+        return n
+
+    def ready(self, slots) -> bool:
+        """True when every listed slot has a frame queued — a lockstep
+        batch can dispatch."""
+        return all(self._q[s] for s in slots)
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Host-observable serving pipeline counters (the device-side
+    dispatch/sync counters live on ``ShardedPool.stats``)."""
+
+    steps: int = 0                 # lockstep frame-steps dispatched
+    frames_in: int = 0             # frames accepted by submit()
+    frames_dropped: int = 0        # queued frames discarded by retire()
+    admits: int = 0
+    retires: int = 0
+    backpressure_events: int = 0   # submits that hit a full queue
+    queue_wait_s: float = 0.0      # total enqueue->dispatch latency
+    stage_s: float = 0.0           # host time staging batches
+
+    @property
+    def queue_wait_ms_per_frame(self) -> float:
+        n = max(self.frames_in - self.frames_dropped, 1)
+        return 1e3 * self.queue_wait_s / n
+
+
+class SlamServer:
+    """The queue-fed dispatcher over a :class:`ShardedPool`.
+
+    Streams ``submit`` frames into bounded per-slot queues; ``pump``
+    dispatches one lockstep frame-step whenever every live slot has a
+    frame queued.  Dispatch is asynchronous — the jitted call returns as
+    soon as XLA enqueues the work — so the host immediately moves on to
+    staging the next batch (``np.stack`` + sharded ``device_put``) while
+    the devices compute.  Only :meth:`drain` blocks.
+
+    ``admit``/``retire`` are the admission tier: retire snapshots a row as
+    a solo session and frees the slot (blank frames keep the lockstep
+    shape; the row's leftover state is scratch), admit overwrites a free
+    slot's every leaf with a fresh session.  A full pool raises
+    :class:`PoolFull`.
+    """
+
+    def __init__(self, pool: ShardedPool, queue_depth: int = 2,
+                 live: Optional[Sequence[int]] = None):
+        self.pool = pool
+        self.queue = FrameQueue(pool.size, queue_depth)
+        self.stats = ServeStats()
+        self._live = [False] * pool.size
+        for s in (range(pool.size) if live is None else live):
+            self._live[s] = True
+        intr = pool.meta.intr
+        self._blank = (np.zeros((intr.height, intr.width, 3), np.float32),
+                       np.zeros((intr.height, intr.width), np.float32))
+        self.last_result: Optional[StepResult] = None
+
+    # -- introspection -----------------------------------------------------
+
+    def live_slots(self) -> List[int]:
+        return [s for s, lv in enumerate(self._live) if lv]
+
+    def free_slots(self) -> List[int]:
+        return [s for s, lv in enumerate(self._live) if not lv]
+
+    # -- ingest ------------------------------------------------------------
+
+    def submit(self, slot: int, frame) -> None:
+        """Queue one frame for ``slot``.  On a full queue, backpressure:
+        pump (dispatching any ready lockstep batches) to make room; if the
+        queue is still full — this stream is ahead of a starved peer —
+        raise :class:`QueueFull`."""
+        if not self._live[slot]:
+            raise ValueError(f"slot {slot} is not live; admit a session "
+                             "first")
+        if not self.queue.put(slot, frame):
+            self.stats.backpressure_events += 1
+            self.pump()
+            if not self.queue.put(slot, frame):
+                raise QueueFull(
+                    f"slot {slot}'s queue is at depth {self.queue.depth} "
+                    "and no lockstep batch can dispatch (a peer stream is "
+                    "starved); submit frames for the other live slots")
+        self.stats.frames_in += 1
+
+    # -- dispatch ----------------------------------------------------------
+
+    def pump(self) -> int:
+        """Dispatch as many lockstep frame-steps as the queues allow,
+        asynchronously (never blocks on device compute).  Returns the
+        number of steps dispatched."""
+        live = self.live_slots()
+        steps = 0
+        while live and self.queue.ready(live):
+            t0 = time.monotonic()
+            rows = []
+            for s in range(self.pool.size):
+                if self._live[s]:
+                    frame, waited = self.queue.pop(s)
+                    self.stats.queue_wait_s += waited
+                    rows.append(frame)
+                else:
+                    rows.append(self._blank)
+            obs = self.pool.stage(rows)
+            self.stats.stage_s += time.monotonic() - t0
+            self.last_result = self.pool.step(obs)
+            self.stats.steps += 1
+            steps += 1
+        return steps
+
+    def drain(self) -> None:
+        """Pump the remaining ready batches, then block until every
+        in-flight dispatch finishes — the ONE device sync of a serving
+        run."""
+        self.pump()
+        jax.block_until_ready(jax.tree.leaves(self.pool.stacked))
+        self.pool.stats.syncs += 1
+
+    # -- admission control -------------------------------------------------
+
+    def admit(self, session: SlamSession) -> int:
+        """Place ``session`` in the first free slot (one row swap across
+        the shards) and mark it live.  Raises :class:`PoolFull` when every
+        slot is serving — the admission backpressure signal."""
+        free = self.free_slots()
+        if not free:
+            raise PoolFull(
+                f"all {self.pool.size} slots are live; retire a session "
+                "first (admission backpressure)")
+        slot = free[0]
+        self.pool.swap(slot, session)
+        self.queue.clear(slot)
+        self._live[slot] = True
+        self.stats.admits += 1
+        return slot
+
+    def retire(self, slot: int) -> SlamSession:
+        """Snapshot ``slot``'s row as a solo session and free the slot.
+        Queued-but-undispatched frames for the slot are dropped (counted
+        in ``stats.frames_dropped``)."""
+        if not self._live[slot]:
+            raise ValueError(f"slot {slot} is not live")
+        self.stats.frames_dropped += self.queue.clear(slot)
+        self._live[slot] = False
+        self.stats.retires += 1
+        return self.pool.session(slot)
+
+    def finalize(self, slot: int, gt_w2c=None, **kw) -> SLAMResult:
+        """Drain and assemble ``slot``'s :class:`SLAMResult` (syncs)."""
+        self.drain()
+        return self.pool.finalize(slot, gt_w2c=gt_w2c, **kw)

@@ -64,6 +64,7 @@ from repro.slam.datasets import SLAMDataset
 from repro.slam.engine import (
     EngineStats,
     StepEngine,
+    _donate_kwargs,
     get_geo_scan,
     get_stage,
     silence,
@@ -546,21 +547,38 @@ def _make_row_step(meta: SessionMeta, factor: int):
     return row_step
 
 
+def make_many_step(meta: SessionMeta, batch: int, factor: int = 1):
+    """The pure (un-jitted) S-row step function ``many(stacked, obs) ->
+    (stacked', StepResult)``: the solo row trace unrolled once per stacked
+    row.  :func:`step_many` jits it directly; the SlamServe tier
+    (:mod:`repro.slam.server`) jits the SAME function under device
+    shardings — both paths share this builder so per-row computation stays
+    the identical trace (the bitwise anchor of multi-session serving).
+    ``factor`` must match the cache key it is compiled under (serving
+    always uses 1 — see :func:`require_servable`)."""
+    row_step = _make_row_step(meta, factor)
+
+    def many(stacked, obs: Observation):
+        rows = [row_step(session_row(stacked, s), obs.rgb[s],
+                         obs.depth[s]) for s in range(batch)]
+        return (_tree_stack([r[0] for r in rows]),
+                _tree_stack([r[1] for r in rows]))
+
+    return many
+
+
 def _step_fn(meta: SessionMeta, factor: int, batch: Optional[int]):
     key = session_step_key(meta, factor, batch)
     if key not in _STEP_CACHE:
-        row_step = _make_row_step(meta, factor)
         if batch is None:
+            row_step = _make_row_step(meta, factor)
+
             def solo(sess, obs: Observation):
                 return row_step(sess, obs.rgb, obs.depth)
-            _STEP_CACHE[key] = jax.jit(solo)
+            _STEP_CACHE[key] = jax.jit(solo, **_donate_kwargs("sess"))
         else:
-            def many(stacked, obs: Observation):
-                rows = [row_step(session_row(stacked, s), obs.rgb[s],
-                                 obs.depth[s]) for s in range(batch)]
-                return (_tree_stack([r[0] for r in rows]),
-                        _tree_stack([r[1] for r in rows]))
-            _STEP_CACHE[key] = jax.jit(many)
+            _STEP_CACHE[key] = jax.jit(make_many_step(meta, batch, factor),
+                                       **_donate_kwargs("stacked"))
     return _STEP_CACHE[key]
 
 
@@ -679,6 +697,30 @@ def session_step(session: SlamSession, frame, *, factor: int = 1,
     return fn(session, obs)
 
 
+def require_servable(cfg: SLAMConfig, what: str = "step_many") -> None:
+    """Validate that a config can serve stacked multi-session steps:
+    ``fused=True`` and downsampling off (the §4.2 side factor is a
+    host-static per-dispatch choice a shared dispatch cannot make per
+    session).  Shared by :func:`step_many` and the SlamServe tier."""
+    if not cfg.fused:
+        raise ValueError(f"{what} requires cfg.fused=True")
+    if cfg.downsample.enabled:
+        raise ValueError(f"{what} requires downsampling disabled (the "
+                         "side factor is a per-dispatch static)")
+
+
+def stack_observations(frames, batch: int) -> Observation:
+    """Coerce S per-session frames (or an already-stacked ``Observation``)
+    to one ``Observation`` with leading S axes."""
+    if isinstance(frames, Observation):
+        return frames
+    rows = [_as_obs(f) for f in frames]
+    if len(rows) != batch:
+        raise ValueError(f"expected {batch} frames, got {len(rows)}")
+    return Observation(rgb=jnp.stack([r.rgb for r in rows]),
+                       depth=jnp.stack([r.depth for r in rows]))
+
+
 def step_many(stacked: SlamSession, frames, *,
               stats: Optional[EngineStats] = None
               ) -> Tuple[SlamSession, StepResult]:
@@ -688,27 +730,15 @@ def step_many(stacked: SlamSession, frames, *,
     divergence runs under each row's ``lax.cond`` boundaries; per-row
     results are bitwise-equal to solo :func:`session_step` runs.
 
-    Serving constraints: ``cfg.fused=True`` and downsampling disabled (the
-    per-frame factor is a host-static choice a shared dispatch cannot make
-    per session)."""
+    Serving constraints (:func:`require_servable`): ``cfg.fused=True`` and
+    downsampling disabled."""
     s = stacked.batch
     if s is None:
         raise ValueError("step_many takes a stacked session "
                          "(see stack_sessions)")
     meta = stacked.meta
-    if not meta.cfg.fused:
-        raise ValueError("step_many requires cfg.fused=True")
-    if meta.cfg.downsample.enabled:
-        raise ValueError("step_many requires downsampling disabled (the "
-                         "side factor is a per-dispatch static)")
-    if isinstance(frames, Observation):
-        obs = frames
-    else:
-        rows = [_as_obs(f) for f in frames]
-        if len(rows) != s:
-            raise ValueError(f"expected {s} frames, got {len(rows)}")
-        obs = Observation(rgb=jnp.stack([r.rgb for r in rows]),
-                          depth=jnp.stack([r.depth for r in rows]))
+    require_servable(meta.cfg)
+    obs = stack_observations(frames, s)
     fn = _step_fn(meta, 1, s)
     if stats is not None:
         stats.dispatches += 1
@@ -1002,6 +1032,24 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
 # ---------------------------------------------------------------------------
 
 
+def validate_admission(new_session: SlamSession, stacked: SlamSession) -> None:
+    """Shared admission preconditions for pool row swaps
+    (:class:`SessionPool` and the SlamServe ``ShardedPool``): equal static
+    config, solo shape, matching trajectory capacity.  New preconditions
+    go here so both serving tiers enforce them."""
+    if new_session.meta != stacked.meta:
+        raise ValueError("admitted session's static config differs from "
+                         "the pool's")
+    if new_session.batch is not None:
+        raise ValueError("admit a solo session, not a stack")
+    if new_session.max_frames != stacked.max_frames:
+        raise ValueError(
+            "admitted session's max_frames "
+            f"({new_session.max_frames}) must match the pool's "
+            f"({stacked.max_frames}); pass max_frames= to "
+            "session_init")
+
+
 class SessionPool:
     """Host wrapper serving S concurrent SLAM streams through one stacked
     session pytree: every :meth:`step` is ONE dispatch of ONE shared
@@ -1034,17 +1082,7 @@ class SessionPool:
     def swap(self, slot: int, new_session: SlamSession) -> SlamSession:
         """Retire the session in ``slot`` (returned as a solo session) and
         admit ``new_session`` in its place."""
-        if new_session.meta != self._stacked.meta:
-            raise ValueError("admitted session's static config differs from "
-                             "the pool's")
-        if new_session.batch is not None:
-            raise ValueError("admit a solo session, not a stack")
-        if new_session.max_frames != self._stacked.max_frames:
-            raise ValueError(
-                "admitted session's max_frames "
-                f"({new_session.max_frames}) must match the pool's "
-                f"({self._stacked.max_frames}); pass max_frames= to "
-                "session_init")
+        validate_admission(new_session, self._stacked)
         old = self.session(slot)
         self._stacked = jax.tree.map(
             lambda buf, row: buf.at[slot].set(row), self._stacked,

@@ -1,0 +1,286 @@
+"""SlamServe acceptance tests.
+
+Two layers:
+
+* In-process (fast, single real CPU device): :class:`FrameQueue` /
+  :class:`SlamServer` host-pipeline semantics — lockstep dispatch gating,
+  ingest backpressure (``QueueFull``), admission backpressure
+  (``PoolFull``), retire/admit bookkeeping, stats — plus a D=1
+  :class:`ShardedPool` whose rows must match plain ``step_many`` bitwise
+  and cost exactly one dispatch per frame-step.
+
+* Multi-device (slow, subprocess with
+  ``--xla_force_host_platform_device_count=8`` — the test process owns the
+  single real device, same pattern as tests/test_multidevice.py): rows
+  sharded over a 2-device "data" mesh are bitwise-equal to the
+  single-device ``step_many`` baseline, one dispatch per frame-step
+  independent of device count, and mid-stream admit/retire via
+  :class:`SlamServer` stays row-exact under sharding.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.launch.mesh import make_data_mesh
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.server import (
+    FrameQueue,
+    PoolFull,
+    QueueFull,
+    ShardedPool,
+    SlamServer,
+)
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _cfg(**kw):
+    # Same static config as tests/test_session.py so both modules share one
+    # set of stage/step executables within a pytest process.
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return S.SLAMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def duo():
+    cfg = _cfg()
+    scenes = [make_dataset(n, num_frames=5, height=48, width=64,
+                           num_gaussians=400, frag_capacity=48, seed=i)
+              for i, n in enumerate(("room0", "stairs0"))]
+    return cfg, scenes
+
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        eq = (np.array_equal(x, y, equal_nan=True)
+              if np.issubdtype(x.dtype, np.floating) else np.array_equal(x, y))
+        if not eq:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# FrameQueue semantics (pure host logic)
+# ---------------------------------------------------------------------------
+
+def test_frame_queue_bounded_lockstep():
+    q = FrameQueue(slots=3, depth=2)
+    assert not q.ready([0, 1])          # empty: no lockstep batch
+    assert q.put(0, "a0") and q.put(0, "a1")
+    assert not q.put(0, "a2")           # depth 2: backpressure signal
+    assert not q.ready([0, 1])          # slot 1 starved
+    assert q.put(1, "b0")
+    assert q.ready([0, 1])              # free slot 2 doesn't gate
+    frame, waited = q.pop(0)
+    assert frame == "a0" and waited >= 0.0
+    assert q.fill(0) == 1
+    assert q.clear(0) == 1 and q.fill(0) == 0
+    with pytest.raises(ValueError, match="depth"):
+        FrameQueue(slots=1, depth=0)
+
+
+# ---------------------------------------------------------------------------
+# D=1 sharded pool: bitwise == step_many, one dispatch per frame-step
+# ---------------------------------------------------------------------------
+
+def test_sharded_pool_matches_step_many_bitwise_d1(duo):
+    cfg, scenes = duo
+    stack = S.stack_sessions([S.session_init(ds, cfg) for ds in scenes])
+    for t in (1, 2, 3):
+        stack, _ = S.step_many(stack, [ds.frames[t] for ds in scenes])
+
+    pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                       mesh=make_data_mesh(1))
+    srv = SlamServer(pool)
+    for t in (1, 2, 3):
+        for i, ds in enumerate(scenes):
+            srv.submit(i, ds.frames[t])
+        assert srv.pump() == 1          # lockstep: one batch per round here
+    srv.drain()
+
+    assert pool.stats.dispatches == 3   # ONE dispatch per frame-step
+    assert srv.stats.steps == 3
+    assert srv.stats.frames_in == 6
+    assert srv.stats.queue_wait_s >= 0.0
+    for i in range(2):
+        assert _leaves_equal(pool.session(i), S.session_row(stack, i)), (
+            f"slot {i} diverged from single-device step_many")
+
+
+def test_server_backpressure_and_admission(duo):
+    cfg, scenes = duo
+    ds_a, ds_b = scenes
+    pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                       mesh=make_data_mesh(1))
+    srv = SlamServer(pool, queue_depth=2)
+
+    # Ingest backpressure: stream A runs ahead, B starves -> A's third
+    # frame cannot queue, pump can't dispatch (no lockstep batch), raise.
+    srv.submit(0, ds_a.frames[1])
+    srv.submit(0, ds_a.frames[2])
+    with pytest.raises(QueueFull, match="starved"):
+        srv.submit(0, ds_a.frames[3])
+    assert srv.stats.backpressure_events == 1
+    assert srv.pump() == 0
+
+    # Feeding B releases both queued steps at once.
+    srv.submit(1, ds_b.frames[1])
+    srv.submit(1, ds_b.frames[2])
+    assert srv.pump() == 2
+
+    # Admission backpressure: a full pool refuses new sessions.
+    with pytest.raises(PoolFull, match="retire"):
+        srv.admit(S.session_init(ds_b, cfg))
+
+    # Retire -> the freed slot refuses frames, pool accepts a new stream.
+    retired = srv.retire(1)
+    assert retired.batch is None
+    assert srv.free_slots() == [1]
+    with pytest.raises(ValueError, match="not live"):
+        srv.submit(1, ds_b.frames[3])
+    ds_c = make_dataset("desk0", num_frames=5, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48, seed=9)
+    slot = srv.admit(S.session_init(ds_c, cfg))
+    assert slot == 1 and srv.live_slots() == [0, 1]
+    assert pool.admin_dispatches == 1
+
+    # The admitted row then steps bitwise-identically to its solo run.
+    srv.submit(0, ds_a.frames[3])
+    srv.submit(1, ds_c.frames[1])
+    srv.pump()
+    srv.drain()
+    solo = S.session_init(ds_c, cfg)
+    solo, _ = S.session_step(solo, ds_c.frames[1])
+    assert _leaves_equal(pool.session(1), solo)
+
+
+def test_sharded_pool_validation(duo):
+    cfg, scenes = duo
+    sess = S.session_init(scenes[0], cfg)
+    with pytest.raises(ValueError, match="at least one"):
+        ShardedPool([], mesh=make_data_mesh(1))
+    with pytest.raises(ValueError, match="fused"):
+        ShardedPool([S.session_init(scenes[0], _cfg(fused=False))],
+                    mesh=make_data_mesh(1))
+    pool = ShardedPool([sess, S.session_init(scenes[1], cfg)],
+                       mesh=make_data_mesh(1))
+    with pytest.raises(ValueError, match="static config"):
+        pool.swap(0, S.session_init(scenes[0], _cfg(iters_map=5)))
+    with pytest.raises(ValueError, match="max_frames"):
+        pool.swap(0, S.session_init(scenes[0], cfg, max_frames=9))
+
+
+# ---------------------------------------------------------------------------
+# multi-device: subprocess with 8 forced host devices
+# ---------------------------------------------------------------------------
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_sharded_rows_bitwise_and_admission_multidevice():
+    """On a 2-device "data" mesh: (a) every ShardedPool row is bitwise-
+    equal to the single-device step_many baseline, with exactly one
+    dispatch per frame-step and leaves genuinely sharded over 2 devices;
+    (b) a mid-stream SlamServer retire/admit swap stays row-exact — the
+    retired snapshot equals the baseline row, and after admission every
+    live row still matches a baseline that had the same row replaced."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.core.keyframes import KeyframePolicy
+        from repro.core.pruning import PruneConfig
+        from repro.launch.mesh import make_data_mesh
+        from repro.slam import session as S
+        from repro.slam.datasets import make_dataset
+        from repro.slam.server import ShardedPool, SlamServer
+
+        assert len(jax.devices()) == 8
+        cfg = S.SLAMConfig(iters_track=3, iters_map=4, capacity=1024,
+                           frag_capacity=48, map_window=2,
+                           map_rebuild_stride=2, scan_unroll=1,
+                           keyframe=KeyframePolicy(kind="monogs", interval=2),
+                           prune=PruneConfig(k0=2, step_frac=0.1))
+        names = ("room0", "room1", "hall0", "stairs0")   # heterogeneous rows
+        scenes = [make_dataset(n, num_frames=5, height=48, width=64,
+                               num_gaussians=400, frag_capacity=48, seed=i)
+                  for i, n in enumerate(names)]
+        fresh = make_dataset("desk0", num_frames=5, height=48, width=64,
+                             num_gaussians=400, frag_capacity=48, seed=9)
+
+        def leaves_equal(a, b):
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                x, y = np.asarray(x), np.asarray(y)
+                eq = (np.array_equal(x, y, equal_nan=True)
+                      if np.issubdtype(x.dtype, np.floating)
+                      else np.array_equal(x, y))
+                if not eq:
+                    return False
+            return True
+
+        # -- single-device baseline: stack pinned to device 0, step_many,
+        #    with row 1 swapped for the fresh stream after step 2 ---------
+        d0 = jax.devices()[0]
+        stack = jax.device_put(
+            S.stack_sessions([S.session_init(ds, cfg) for ds in scenes]), d0)
+        for t in (1, 2):
+            stack, _ = S.step_many(stack, [ds.frames[t] for ds in scenes])
+        base_row1 = S.session_row(stack, 1)          # retire-time snapshot
+        stack = jax.tree.map(
+            lambda buf, row: buf.at[1].set(row), stack,
+            jax.device_put(S.session_init(fresh, cfg), d0))
+        feeds = [(scenes[0], 3), (fresh, 1), (scenes[2], 3), (scenes[3], 3)]
+        for k in range(2):
+            stack, _ = S.step_many(
+                stack, [ds.frames[t + k] for ds, t in feeds])
+
+        # -- sharded serving: 2-device mesh, queue-fed, retire/admit ------
+        pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                           mesh=make_data_mesh(2))
+        srv = SlamServer(pool)
+        for t in (1, 2):
+            for i, ds in enumerate(scenes):
+                srv.submit(i, ds.frames[t])
+            srv.pump()
+        retired = srv.retire(1)
+        assert leaves_equal(retired, base_row1), "retired snapshot diverged"
+        assert srv.admit(S.session_init(fresh, cfg)) == 1
+        for k in range(2):
+            for i, (ds, t) in enumerate(feeds):
+                srv.submit(i, ds.frames[t + k])
+            srv.pump()
+        srv.drain()
+
+        assert pool.stats.dispatches == 4, pool.stats.dispatches
+        assert len(pool.stacked.traj.sharding.device_set) == 2
+        for i in range(4):
+            assert leaves_equal(pool.session(i), S.session_row(stack, i)), (
+                f"row {i} diverged from single-device step_many")
+        print("OK", pool.stats.dispatches, pool.admin_dispatches)
+    """)
+    assert "OK 4 1" in out
