@@ -117,7 +117,7 @@ def _spawn(devices: int, sessions: int, num_frames: int) -> dict:
 
 
 def run(quick: bool = True, out: str = "BENCH_slam.json"):
-    from benchmarks.common import emit
+    from benchmarks.common import emit, stamp
 
     device_counts = (1, 2) if quick else (1, 2, 4)
     sessions = 4 if quick else 8
@@ -151,7 +151,7 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
     if os.path.exists(out):
         with open(out) as fh:
             report = json.load(fh)
-    report["serve"] = summary
+    report["serve"] = stamp(summary, quick=quick)
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
     return summary

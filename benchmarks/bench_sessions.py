@@ -28,7 +28,7 @@ import time
 
 import jax
 
-from benchmarks.common import emit
+from benchmarks.common import emit, stamp
 from repro.core.keyframes import KeyframePolicy
 from repro.slam.datasets import make_dataset, registered_scenes
 from repro.slam.engine import EngineStats
@@ -151,7 +151,7 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
     if os.path.exists(out):
         with open(out) as fh:
             report = json.load(fh)
-    report["sessions"] = summary
+    report["sessions"] = stamp(summary, quick=quick)
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
     return summary

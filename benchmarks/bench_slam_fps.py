@@ -18,7 +18,7 @@ if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
 import json
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, stamp
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
 from repro.slam.datasets import make_dataset
@@ -71,6 +71,7 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
         u["dispatches_per_frame"] / max(f["dispatches_per_frame"], 1e-9), 2)
     report["sync_reduction"] = round(
         u["syncs_per_frame"] / max(f["syncs_per_frame"], 1e-9), 2)
+    stamp(report, quick=quick, scene="room0")
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
     emit("slam_fps/fused", 1e6 / max(f["fps"], 1e-9),

@@ -33,7 +33,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, stamp
 from repro.core.keyframes import KeyframePolicy
 from repro.core.schedule import build_schedule, pair_loads
 from repro.slam.datasets import make_dataset
@@ -118,7 +118,7 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
     if os.path.exists(out):
         with open(out) as fh:
             report = json.load(fh)
-    report["wsu"] = telemetry
+    report["wsu"] = stamp(telemetry, quick=quick, scene="desk0")
     with open(out, "w") as fh:
         json.dump(report, fh, indent=2)
 

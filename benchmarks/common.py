@@ -1,12 +1,39 @@
-"""Shared benchmark utilities: CSV emission + timed helpers."""
+"""Shared benchmark utilities: CSV emission, timed helpers, and provenance
+stamping for the BENCH_*.json rows."""
 
 from __future__ import annotations
 
+import os
+import subprocess
 import time
 
 import jax
 
 ROWS = []
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_commit() -> str:
+    """Short hash of the checkout that produced a BENCH row (``"unknown"``
+    outside a git checkout or without a git binary)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=_REPO_ROOT, timeout=10,
+        )
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def stamp(row: dict, **flags) -> dict:
+    """Attach provenance to a BENCH row: the git commit it was measured at
+    plus the bench flags (quick/full, scene, …) that produced it, under a
+    ``"meta"`` key.  Returns ``row`` so call sites can stamp inline:
+    ``report["wsu"] = stamp(telemetry, quick=quick)``."""
+    row["meta"] = {"commit": git_commit(), **flags}
+    return row
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -24,6 +24,7 @@ def main() -> None:
         bench_serve,
         bench_sessions,
         bench_slam_fps,
+        bench_sparse,
         bench_wsu,
         fig14_pruning_ablation,
         fig17_breakdown,
@@ -41,9 +42,10 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "roofline": roofline_table.run,
         "slam_fps": bench_slam_fps.run,
-        # after slam_fps: wsu + sessions + serve amend the BENCH_slam.json
-        # it (re)writes
+        # after slam_fps: wsu + sparse + sessions + serve amend the
+        # BENCH_slam.json it (re)writes
         "wsu": bench_wsu.run,
+        "sparse": bench_sparse.run,
         "sessions": bench_sessions.run,
         "serve": bench_serve.run,
     }

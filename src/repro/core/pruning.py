@@ -25,6 +25,22 @@ Mask-prune protocol (verbatim from the paper):
 Fragment lists are rebuilt only at interval boundaries; within the interval
 the cached lists are reused (the paper reuses Step 1-2 + Step 2 results),
 with masked Gaussians silenced through zeroed opacity.
+
+Stable/unstable stability bit (RTG-SLAM / Splatonic sparsity)
+-------------------------------------------------------------
+On top of the removal protocol, :class:`PruneState` carries a per-Gaussian
+**stability bit**: a Gaussian whose Eq. 7 gradient-magnitude EMA has stayed
+below a (relative) threshold for ``stable_age`` consecutive tracking
+iterations is *stable* — converged, safe to freeze.  The EMA/age update
+rides :func:`accumulate`, i.e. it reuses the §4.1 tracking gradients and
+costs **zero extra backward passes** (the same gradient-reuse trick as the
+importance score itself).  The sparse mapping path
+(``SLAMConfig.sparse_opt=True``) consumes the bit three ways: masked Adam
+(stable params bit-frozen), stability-masked fragment builds (stable
+Gaussians emit no fragments), and the WSU schedule built from the masked
+counts (stable-only tiles get zero-trip programs).  A Gaussian whose EMA
+rises back above the threshold resets its age and thaws immediately;
+densified newcomers are reset via :func:`mark_born`.
 """
 
 from __future__ import annotations
@@ -45,6 +61,19 @@ class PruneConfig(NamedTuple):
     max_ratio: float = 0.5      # global pruning cap (Fig. 14a)
     k_min: int = 2
     k_max: int = 40
+    # -- stability bit (sparse stable/unstable optimization) ---------------
+    stable_ema_beta: float = 0.8   # EMA decay of the Eq. 7 score per iteration
+    stable_rel: float = 0.5        # stable when EMA < stable_rel * mean alive
+                                   # EMA (relative: robust across scene scale)
+    stable_thresh: float = 0.0     # absolute EMA floor OR-ed into the test
+    stable_age: int = 8            # consecutive low-EMA iterations to freeze
+    stable_warmup: int = 0         # accumulate() calls before bits may set:
+                                   # the early map trains dense (bitwise —
+                                   # an all-False mask IS the oracle) and
+                                   # only the late, converged trajectory
+                                   # freezes.  EMA/age still mature during
+                                   # warmup, so quiet Gaussians freeze the
+                                   # moment it ends.
 
 
 class PruneState(NamedTuple):
@@ -55,6 +84,11 @@ class PruneState(NamedTuple):
     prev_tile_count: jnp.ndarray  # (T,) int32 fragment counts at last boundary
     initial_alive: jnp.ndarray  # () int32 alive count at frame start (for cap)
     removed: jnp.ndarray        # () int32 total permanently removed
+    grad_ema: jnp.ndarray       # (N,) f32 Eq. 7 gradient-magnitude EMA
+    age: jnp.ndarray            # (N,) i32 consecutive low-EMA iterations
+    stable: jnp.ndarray         # (N,) bool — stability bit (age >= stable_age)
+    opt_steps: jnp.ndarray      # () i32 total accumulate() calls — the
+                                #   stable_warmup clock
 
 
 def init_state(g: GaussianField, num_tiles: int, cfg: PruneConfig) -> PruneState:
@@ -67,6 +101,10 @@ def init_state(g: GaussianField, num_tiles: int, cfg: PruneConfig) -> PruneState
         prev_tile_count=jnp.zeros((num_tiles,), jnp.int32),
         initial_alive=g.num_alive().astype(jnp.int32),
         removed=jnp.zeros((), jnp.int32),
+        grad_ema=jnp.zeros((n,), jnp.float32),
+        age=jnp.zeros((n,), jnp.int32),
+        stable=jnp.zeros((n,), bool),
+        opt_steps=jnp.zeros((), jnp.int32),
     )
 
 
@@ -79,11 +117,62 @@ def importance_scores(param_grads: dict, cfg: PruneConfig) -> jnp.ndarray:
     return g_mu + cfg.lam * g_cov
 
 
-def accumulate(state: PruneState, param_grads: dict, cfg: PruneConfig) -> PruneState:
-    """Per-tracking-iteration score accumulation (jit-safe)."""
+def accumulate(state: PruneState, param_grads: dict, cfg: PruneConfig,
+               alive: jnp.ndarray | None = None) -> PruneState:
+    """Per-tracking-iteration score accumulation (jit-safe).
+
+    With ``alive`` (the field's (N,) alive mask) the stability bit is
+    maintained too, from the same Eq. 7 scores — gradient-magnitude EMA,
+    consecutive-low-EMA age, and ``stable = alive & (age >= stable_age)``.
+    The threshold is relative (``stable_rel`` x mean alive EMA, with the
+    heavy-tailed unstable set pulling the mean up) OR-ed with the absolute
+    ``stable_thresh`` floor, and the bit is additionally gated by the
+    ``stable_warmup`` clock (``opt_steps``): during warmup EMA and age
+    mature but nothing freezes, so the early (unconverged) map always
+    trains dense.  Without ``alive`` only the score accumulates (the
+    pre-stability behavior)."""
+    s = importance_scores(param_grads, cfg)
+    new_score = state.score + s
+    iters_left = state.iters_left - 1
+    opt_steps = state.opt_steps + 1
+    if alive is None:
+        return state._replace(score=new_score, iters_left=iters_left,
+                              opt_steps=opt_steps)
+    alive_f = alive.astype(jnp.float32)
+    ema = cfg.stable_ema_beta * state.grad_ema + (1.0 - cfg.stable_ema_beta) * s
+    mean_ema = jnp.sum(ema * alive_f) / jnp.maximum(jnp.sum(alive_f), 1.0)
+    thresh = jnp.maximum(cfg.stable_rel * mean_ema, cfg.stable_thresh)
+    low = alive & (ema < thresh)
+    age = jnp.where(low, state.age + 1, 0)
     return state._replace(
-        score=state.score + importance_scores(param_grads, cfg),
-        iters_left=state.iters_left - 1,
+        score=new_score,
+        iters_left=iters_left,
+        opt_steps=opt_steps,
+        grad_ema=ema,
+        age=age,
+        stable=alive & (age >= cfg.stable_age)
+               & (opt_steps >= cfg.stable_warmup),
+    )
+
+
+def optimizable_mask(state: PruneState) -> jnp.ndarray:
+    """(N,) bool — the rows the sparse mapping path optimizes and rasterizes:
+    everything not stability-frozen.  Dead/masked rows stay in the mask on
+    purpose: they are already silenced and carry ~zero gradients, and keeping
+    them is what makes the all-unstable case bitwise-equal to the dense
+    path (``jnp.where(True, new, old) == new``)."""
+    return ~state.stable
+
+
+def mark_born(state: PruneState, born: jnp.ndarray) -> PruneState:
+    """Reset stability for newly inserted Gaussians.  Densification writes
+    into previously-dead slots whose stale EMA/age would otherwise freeze a
+    newcomer for its first mapping phase — exactly the Gaussians mapping
+    must optimize hardest."""
+    return state._replace(
+        grad_ema=jnp.where(born, 0.0, state.grad_ema),
+        age=jnp.where(born, 0, state.age),
+        stable=state.stable & ~born,
     )
 
 
@@ -105,7 +194,14 @@ def retile_state(state: PruneState, num_tiles: int,
     is restored, so churn at a later same-grid boundary still compares
     against real counts.  A grid seen for the first time gets the ``-1``
     sentinel, which ``interval_update`` reads as "no comparable baseline →
-    churn 0"."""
+    churn 0".
+
+    Only ``prev_tile_count`` is tile-shaped; every per-Gaussian leaf —
+    including the stability leaves ``grad_ema``/``age``/``stable`` — is
+    (N,)-shaped and carried through ``_replace`` untouched, so a factor
+    switch never thaws or freezes anything
+    (tests/test_pruning_downsample.py::test_retile_carries_stability_leaves).
+    """
     cur = state.prev_tile_count
     if cur.shape[0] == num_tiles:
         return state
@@ -176,6 +272,10 @@ def interval_update(
         prev_tile_count=tile_count,
         initial_alive=state.initial_alive,
         removed=removed,
+        grad_ema=state.grad_ema,
+        age=state.age,
+        stable=state.stable & alive,  # removed rows can never stay frozen
+        opt_steps=state.opt_steps,
     )
     return new_state, g._replace(alive=alive), want > 0
 

@@ -69,10 +69,11 @@ def _tree_stack(trees):
 
 
 def _render_single(g: GaussianField, cam: Camera, plan: RasterPlan,
-                   background, frags: Optional[FragmentLists]) -> RenderOutput:
+                   background, frags: Optional[FragmentLists],
+                   keep=None) -> RenderOutput:
     proj = project(g, cam)
     if frags is None:
-        frags = build_fragment_lists(proj, plan.grid, plan.capacity)
+        frags = build_fragment_lists(proj, plan.grid, plan.capacity, keep=keep)
     # A schedule-backend plan without a carried sched derives one from the
     # frame's counts inside the backend (ops.build_plan_schedule).
     color_pm, depth_pm, final_t = ops.rasterize(
@@ -84,7 +85,8 @@ def _render_single(g: GaussianField, cam: Camera, plan: RasterPlan,
 
 
 def _render_batched(g: GaussianField, cam: Camera, plan: RasterPlan,
-                    background, frags: Optional[FragmentLists]) -> RenderOutput:
+                    background, frags: Optional[FragmentLists],
+                    keep=None) -> RenderOutput:
     """B views in one call.  Projection/fragment building unroll per view in
     the trace (identical ops to a per-view loop — the bitwise anchor); the
     rasterizer itself is ONE stacked-grid dispatch."""
@@ -92,7 +94,8 @@ def _render_batched(g: GaussianField, cam: Camera, plan: RasterPlan,
     projs = [project(g, Camera(cam.intrinsics, cam.w2c[b]))
              for b in range(num_views)]
     if frags is None:
-        frag_views = [build_fragment_lists(projs[b], plan.grid, plan.capacity)
+        frag_views = [build_fragment_lists(projs[b], plan.grid, plan.capacity,
+                                           keep=keep)
                       for b in range(num_views)]
         frags = _tree_stack(frag_views)
     proj = _tree_stack(projs)
@@ -113,6 +116,7 @@ def render(
     sched: Optional[TileSchedule] = None,
     *,
     background=(0.0, 0.0, 0.0),
+    keep=None,
 ) -> RenderOutput:
     """Render ``g`` from ``cam`` under a :class:`RasterPlan`.
 
@@ -121,7 +125,10 @@ def render(
     leading B axis, **bit-identical** to rendering each view separately).
     Pass cached ``frags`` (leading B axis when batched) to reuse fragment
     lists across iterations; a ``schedule``-backend plan can carry the WSU
-    schedule the same way (``plan.sched``).
+    schedule the same way (``plan.sched``).  ``keep`` (an (N,) bool mask)
+    forwards to :func:`build_fragment_lists` when ``frags`` is None — the
+    sparse stable/unstable path passes ``~stable`` so frozen Gaussians emit
+    no fragments; ignored when cached ``frags`` are supplied.
 
     The legacy signature ``render(g, cam, grid, cfg=RenderConfig(), frags,
     sched)`` is still accepted (warn-once shim): ``cfg``/``sched`` fold into
@@ -144,5 +151,5 @@ def render(
             "the RasterPlan (cfg.plan(grid, sched=...))")
 
     if cam.w2c.ndim == 3:
-        return _render_batched(g, cam, plan, background, frags)
-    return _render_single(g, cam, plan, background, frags)
+        return _render_batched(g, cam, plan, background, frags, keep)
+    return _render_single(g, cam, plan, background, frags, keep)

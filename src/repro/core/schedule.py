@@ -116,3 +116,41 @@ def pair_loads(sched: TileSchedule) -> jnp.ndarray:
     """Fragment load per pair program, (S/2,) — the quantity pairing
     balances and the imbalance counters report on."""
     return sched.load.reshape(-1, 2).sum(axis=1)
+
+
+def active_programs(sched: TileSchedule) -> jnp.ndarray:
+    """() int32 — pair programs with nonzero trips, i.e. programs that
+    actually stream fragments.  XLA's grid is static, so the sparse
+    stable/unstable path can't literally launch fewer programs; a zero-trip
+    pair's ``fori_loop(0, 0)`` body never runs, so this count is the honest
+    software proxy for the shrunken grid a real WSU would launch (same
+    provisioned-vs-streamed convention as the WSU trip counters)."""
+    pair_trips = sched.trips.reshape(-1, 2).sum(axis=1)
+    return jnp.sum((pair_trips > 0).astype(jnp.int32))
+
+
+def active_tile_programs(count: jnp.ndarray) -> jnp.ndarray:
+    """() int32 — tiles with nonzero fragment count: the per-tile-program
+    analogue of :func:`active_programs` for the unscheduled backends (tile
+    and interpret-mode Pallas), where one program owns one tile."""
+    return jnp.sum((count > 0).astype(jnp.int32))
+
+
+def scheduled_trips(sched: TileSchedule) -> jnp.ndarray:
+    """() int32 — total chunk trips the schedule streams: the **subtile
+    program** count in the WSU's subtile-level streaming model, where each
+    chunk trip is one scheduled unit of raster work.  This is the
+    granularity at which stable/unstable sparsity is visible: pairing folds
+    empty tiles onto loaded ones, so :func:`active_programs` (pair
+    granularity) only drops when BOTH tiles of a pair are empty — on small
+    grids that almost never happens — while a stable-only tile's trips drop
+    to zero immediately and the total tracks streamed work."""
+    return jnp.sum(sched.trips)
+
+
+def tile_trips(count: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """() int32 — :func:`scheduled_trips` for the unscheduled backends: the
+    chunk trips a per-tile capacity loop would actually need (``ceil(count
+    / chunk)`` per tile), i.e. the same subtile-program unit without the
+    pairing."""
+    return jnp.sum((count + chunk - 1) // chunk)

@@ -55,13 +55,22 @@ class FragmentLists(NamedTuple):
 
 
 def build_fragment_lists(
-    proj: ProjectedGaussians, grid: TileGrid, capacity: int
+    proj: ProjectedGaussians, grid: TileGrid, capacity: int,
+    keep: jnp.ndarray | None = None,
 ) -> FragmentLists:
-    """Vectorized tile-intersection + depth sort. Non-differentiable (indices)."""
+    """Vectorized tile-intersection + depth sort. Non-differentiable (indices).
+
+    ``keep`` (an optional (N,) bool mask) drops Gaussians from the lists
+    entirely — the sparse stable/unstable build passes ``~stable`` so frozen
+    Gaussians emit no fragments and stable-only tiles end up with zero
+    counts (which the WSU schedule then turns into zero-trip programs).
+    An all-True ``keep`` produces lists identical to ``keep=None``."""
     mu2d = jax.lax.stop_gradient(proj.mu2d)
     depth = jax.lax.stop_gradient(proj.depth)
     radius = jax.lax.stop_gradient(proj.radius)
     valid = proj.valid
+    if keep is not None:
+        valid = valid & keep
 
     n = mu2d.shape[0]
     order = jnp.argsort(jnp.where(valid, depth, jnp.inf))  # near -> far
@@ -97,6 +106,28 @@ def build_fragment_lists(
         jnp.broadcast_to(order[None, :], m.shape).reshape(-1), mode="drop"
     )
     return FragmentLists(idx=out, count=count, overflow=overflow, total=total)
+
+
+def count_skipped_fragments(
+    proj: ProjectedGaussians, grid: TileGrid, keep: jnp.ndarray
+) -> jnp.ndarray:
+    """() int32 — tile-Gaussian intersections a ``keep``-masked
+    :func:`build_fragment_lists` omits relative to the dense build.
+
+    A valid Gaussian's membership-row sum is exactly its clipped tile-bbox
+    area, so the skipped total is the bbox-area sum over valid-but-dropped
+    Gaussians — an (N,) computation, no (T, N) membership matrix.  The
+    formulas mirror the build's clips so the count is exact (pre-capacity,
+    like ``FragmentLists.total``)."""
+    mu2d = jax.lax.stop_gradient(proj.mu2d)
+    radius = jax.lax.stop_gradient(proj.radius)
+    tx0 = jnp.clip(jnp.floor((mu2d[:, 0] - radius) / TILE), 0, grid.grid_w - 1)
+    tx1 = jnp.clip(jnp.floor((mu2d[:, 0] + radius) / TILE), 0, grid.grid_w - 1)
+    ty0 = jnp.clip(jnp.floor((mu2d[:, 1] - radius) / TILE), 0, grid.grid_h - 1)
+    ty1 = jnp.clip(jnp.floor((mu2d[:, 1] + radius) / TILE), 0, grid.grid_h - 1)
+    area = ((tx1 - tx0 + 1) * (ty1 - ty0 + 1)).astype(jnp.int32)
+    dropped = proj.valid & ~keep
+    return jnp.sum(jnp.where(dropped, area, 0))
 
 
 def stack_fragment_lists(lists: list["FragmentLists"]) -> FragmentLists:

@@ -50,10 +50,15 @@ from repro.core.camera import Camera, Intrinsics
 from repro.core.losses import slam_loss
 from repro.core.raster_api import RasterPlan, static_fingerprint
 from repro.core.render import render
-from repro.core.schedule import build_schedule
+from repro.core.schedule import (
+    scheduled_trips,
+    tile_trips,
+    build_schedule,
+)
 from repro.core.sorting import (
     FragmentLists,
     build_fragment_lists,
+    count_skipped_fragments,
     make_tile_grid,
     stack_fragment_lists,
     update_fragment_slot,
@@ -61,7 +66,12 @@ from repro.core.sorting import (
 from repro.core.projection import project
 from repro.slam import geometric
 from repro.slam.metrics import DeviceWork, device_work_add, device_work_zero
-from repro.train.optimizer import Adam, AdamState, apply_updates
+from repro.train.optimizer import (
+    Adam,
+    AdamState,
+    apply_updates,
+    apply_updates_masked,
+)
 
 
 def _donate_kwargs(*argnames) -> dict:
@@ -189,11 +199,22 @@ class _Stage:
         self.scheduled = cfg.backend == "schedule"
         self.pixels = self.intr.height * self.intr.width
         self.cfg = cfg
+        # Sparse stable/unstable optimization (ROADMAP item 3): mapping
+        # freezes stable Gaussians out of the Adam step, the fragment build
+        # and the WSU schedule.  Consumption-only flag — the stability bit
+        # itself is maintained in PruneState whenever pruning is on.
+        self.sparse = bool(getattr(cfg, "sparse_opt", False))
+        if self.sparse and cfg.prune is None:
+            raise ValueError("sparse_opt=True requires cfg.prune (the "
+                             "stability bit rides PruneState)")
 
         donate = _donate_kwargs("g", "pstate", "work")
         self.build = jax.jit(self._build_core)
+        self.build_sparse = jax.jit(self._sparse_build_core)
+        self.slot_programs = jax.jit(self._slot_programs_core)
         self.track_iter = jax.jit(self._track_iter_core)
         self.map_iter = jax.jit(self._map_iter_core)
+        self.stable_bg = jax.jit(self._stable_bg_core)
         self.render_eval = jax.jit(self._render_eval_core)
         self.track_scan_noprune = jax.jit(self._track_scan_noprune)
         if cfg.prune is not None:
@@ -204,9 +225,20 @@ class _Stage:
 
     # ---- cores (pure, shared by fused scans and per-iteration jits) -----
 
-    def _build_core(self, g, masked, w2c) -> FragmentLists:
+    def _build_core(self, g, masked, w2c, keep=None) -> FragmentLists:
         proj = project(silence(g, masked), Camera(self.intr, w2c))
-        return build_fragment_lists(proj, self.grid, self.cfg.frag_capacity)
+        return build_fragment_lists(proj, self.grid, self.cfg.frag_capacity,
+                                    keep=keep)
+
+    def _sparse_build_core(self, g, masked, keep, w2c):
+        """Stability-masked fragment build: stable Gaussians emit no
+        fragments, so stable-only tiles get zero counts (and thus zero-trip
+        WSU programs downstream).  Also returns the () int32 count of
+        fragments the mask dropped vs the dense build."""
+        proj = project(silence(g, masked), Camera(self.intr, w2c))
+        frags = build_fragment_lists(proj, self.grid, self.cfg.frag_capacity,
+                                     keep=keep)
+        return frags, count_skipped_fragments(proj, self.grid, keep)
 
     def _sched_core(self, frags: FragmentLists):
         """WSU schedule from the cached fragment counts (pure device math;
@@ -214,6 +246,20 @@ class _Stage:
         return build_schedule(frags.count, self.plan.chunk,
                               bucket=self.cfg.sched_bucket,
                               max_trips=self.plan.max_trips)
+
+    def _slot_programs_core(self, frags: FragmentLists, sched=None):
+        """() int32 scheduled raster programs for one view, in the WSU's
+        subtile-streaming unit: total chunk trips (``schedule.
+        scheduled_trips`` on the WSU backend, the per-tile capacity-loop
+        equivalent otherwise).  This is the quantity the sparse build
+        shrinks — a stable-only tile streams zero trips, and the total
+        tracks streamed work (pair granularity would hide sparsity: pairing
+        folds empty tiles onto loaded ones)."""
+        if self.scheduled:
+            if sched is None:
+                sched = self._sched_core(frags)
+            return scheduled_trips(sched)
+        return tile_trips(frags.count, self.plan.chunk)
 
     def _track_iter_core(self, g, masked, xi, ostate, base_w2c, obs_rgb,
                          obs_depth, frags, sched=None):
@@ -235,7 +281,8 @@ class _Stage:
         return loss, xi + upd, ostate, g_params
 
     def _map_iter_core(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
-                       cache, scheds=None, kf_valid=None):
+                       cache, scheds=None, kf_valid=None, unstable=None,
+                       stable_bg=None):
         """One mapping iteration over the **whole keyframe window**: one
         batched multi-view render (leading window axis on ``kf_*`` and the
         stacked ``cache``), mean window loss, one Adam step.  With a
@@ -245,7 +292,27 @@ class _Stage:
         fixed-shape keyframe ring: invalid slots still render (static
         shapes) but contribute exactly zero to the loss, so a mask with V
         valid slots equals a V-length window bitwise (``x * 1.0 == x`` and
-        ``x + 0.0 == x``)."""
+        ``x + 0.0 == x``).
+
+        ``unstable`` (an (N,) bool row mask) switches the Adam step to the
+        sparse stable/unstable form: stable rows get zero updates, keep
+        their moments, and their params are returned through a ``where``
+        select so they stay **bit-frozen**.  All-True mask == dense step
+        bitwise (the oracle).
+
+        ``stable_bg`` (RTG-SLAM-style stable background, sparse_opt mode)
+        is the per-slot ``(image, depth, final_t)`` of the **stable-only**
+        render: the sparse caches hold unstable fragments only, so the raw
+        render is missing the frozen map and the loss would drag unstable
+        Gaussians into duplicating it.  Compositing the unstable render
+        over the frozen background (``c_u + T_u * c_s``, ``T_u * T_s``)
+        restores the full image at zero per-iteration cost — the stable
+        rows are bit-frozen, so the background is a constant for the whole
+        mapping phase (rendered once by the caller, no gradient flows).
+        With an empty stable set the background is ``(0, 0, 1)`` and every
+        composite reduces bitwise to the dense expressions (``x + T*0`` on
+        values that are never ``-0.0``, ``1 - T*1.0``), preserving the
+        all-unstable oracle."""
         g_eff = silence(g, masked)
         w_len = kf_w2c.shape[0]
 
@@ -253,8 +320,16 @@ class _Stage:
             gg = G.with_params(g_eff, params)
             out = render(gg, Camera(self.intr, kf_w2c),
                          self.plan.with_sched(scheds), frags=cache)
+            if stable_bg is None:
+                img, dep, alp = out.image, out.depth, out.alpha
+            else:
+                bg_img, bg_dep, bg_t = stable_bg
+                t = out.final_t
+                img = out.image + t[..., None] * bg_img
+                dep = out.depth + t * bg_dep
+                alp = 1.0 - t * bg_t
             per_view = [
-                slam_loss(out.image[b], out.depth[b], out.alpha[b],
+                slam_loss(img[b], dep[b], alp[b],
                           kf_rgb[b], kf_depth[b], self.cfg.lambda_pho)
                 for b in range(w_len)
             ]
@@ -266,8 +341,32 @@ class _Stage:
         params = G.params_of(g)
         loss, grads = jax.value_and_grad(loss_fn)(params)
         opt = Adam(lr=self.cfg.lr_map)
-        upd, opt_state = opt.update(grads, opt_state)
-        return loss, G.with_params(g, apply_updates(params, upd)), opt_state
+        if unstable is None:
+            upd, opt_state = opt.update(grads, opt_state)
+            return loss, G.with_params(g, apply_updates(params, upd)), opt_state
+        upd, opt_state = opt.update_masked(grads, opt_state, unstable)
+        new_params = apply_updates_masked(params, upd, unstable)
+        return loss, G.with_params(g, new_params), opt_state
+
+    def _stable_bg_core(self, g, masked, stable, kf_w2c):
+        """Render the **stable-only** map for every window slot: the frozen
+        background the sparse mapping loss composites the unstable render
+        over.  Stable rows are bit-frozen through the whole mapping phase,
+        so one render here stays exact for every iteration — the phase's
+        only extra cost (and the per-slot totals/trips are returned so the
+        caller can account it once, not per iteration).  An empty stable
+        set yields ``(0, 0, 1)`` buffers, zero fragments and zero trips:
+        the dense/all-unstable oracle is untouched."""
+        cache_s, _ = jax.vmap(
+            lambda p: self._sparse_build_core(g, masked, stable, p))(kf_w2c)
+        scheds_s = jax.vmap(self._sched_core)(cache_s) if self.scheduled else None
+        out = render(silence(g, masked), Camera(self.intr, kf_w2c),
+                     self.plan.with_sched(scheds_s), frags=cache_s)
+        progs_w = (jax.vmap(scheduled_trips)(scheds_s) if self.scheduled
+                   else jax.vmap(
+                       lambda c: tile_trips(c, self.plan.chunk))(
+                           cache_s.count))
+        return (out.image, out.depth, out.final_t), cache_s.total, progs_w
 
     def _render_eval_core(self, g, masked, w2c):
         out = render(silence(g, masked), Camera(self.intr, w2c), self.plan)
@@ -287,7 +386,10 @@ class _Stage:
                 g, masked, xi, ostate, base_w2c, obs_rgb, obs_depth, frags,
                 sched)
             alive_eff = jnp.sum((g.alive & ~masked).astype(jnp.int32))
-            work = device_work_add(work, frags.total, self.pixels, alive_eff)
+            # unstable=0: tracking optimizes the pose, not Gaussian params,
+            # so it contributes nothing to the optimized-Gaussian counter.
+            work = device_work_add(work, frags.total, self.pixels, alive_eff,
+                                   unstable=0)
             return (xi, ostate, work), (loss, jnp.asarray(False))
 
         (xi, _, work), (losses, fired) = jax.lax.scan(
@@ -311,8 +413,13 @@ class _Stage:
                 g, pstate.masked, xi, ostate, base_w2c, obs_rgb, obs_depth,
                 frags, sched)
             alive_eff = jnp.sum((g.alive & ~pstate.masked).astype(jnp.int32))
-            work = device_work_add(work, frags.total, self.pixels, alive_eff)
-            pstate = pruning.accumulate(pstate, g_params, prune_cfg)
+            work = device_work_add(work, frags.total, self.pixels, alive_eff,
+                                   unstable=0)
+            # Stability EMA/age ride the same grads (zero extra backward
+            # passes); maintained whenever pruning is on, consumed only
+            # when cfg.sparse_opt.
+            pstate = pruning.accumulate(pstate, g_params, prune_cfg,
+                                        alive=g.alive)
 
             def build_fn(gg, mm):
                 return self._build_core(gg, mm, lie.se3_exp(xi) @ base_w2c)
@@ -339,48 +446,92 @@ class _Stage:
                 unroll=min(self.cfg.scan_unroll, self.cfg.iters_track))
         return xi, g, pstate, work, losses, fired
 
-    def _map_scan(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, work):
+    def _map_scan(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, work,
+                  stable=None):
         """Whole mapping phase in one dispatch: build the window's fragment
         caches (vmapped), then scan the iterations — each iteration renders
         the **whole keyframe window as one batched stacked-grid dispatch**
         (no per-keyframe cycling) and stride-rebuilds one slot's cache
         round-robin (Obs. 6 reuse).
 
+        ``stable`` (an (N,) bool mask, sparse_opt mode) freezes stable
+        Gaussians through all three sparsity layers inside this SAME
+        dispatch: masked Adam (``unstable`` row mask), stability-masked
+        fragment builds (``keep=~stable``, including stride rebuilds), and
+        the WSU schedule built from the masked counts.  The frozen map is
+        rendered ONCE as a per-slot stable background
+        (:meth:`_stable_bg_core`) and composited under every iteration's
+        unstable render, so the loss still targets the full image.  The
+        post-mapping eval render stays dense — reported PSNR is always
+        full-map PSNR.  ``stable=None`` (or all-False) is the dense
+        bitwise oracle.
+
         The window length is static (one executable per length, cached
         module-wide) so no padded slots are ever built."""
         stride = self.cfg.map_rebuild_stride
         w_len = kf_w2c.shape[0]
-        cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+        # Row mask is ~stable alone (pruning.optimizable_mask): dead/masked
+        # rows are already silenced with exactly-zero grads, and including
+        # them keeps the all-unstable case bitwise-equal to the dense path.
+        keep = None if stable is None else ~stable
+        if keep is None:
+            cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+            skipped_w = jnp.zeros((w_len,), jnp.int32)
+            stable_bg = None
+        else:
+            cache, skipped_w = jax.vmap(
+                lambda p: self._sparse_build_core(g, masked, keep, p))(kf_w2c)
+            # One stable-background render for the whole phase (stable rows
+            # are bit-frozen), accounted once — not per iteration.
+            stable_bg, bg_total, bg_progs = self._stable_bg_core(
+                g, masked, stable, kf_w2c)
+            work = work._replace(
+                fragments=work.fragments + jnp.sum(bg_total),
+                sched_programs=work.sched_programs + jnp.sum(bg_progs))
         # WSU: one schedule per window slot, carried with the cache and
         # rebuilt on the same stride boundaries.
         scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
 
         def body(carry, it):
-            g, opt_state, cache, scheds, work = carry
+            g, opt_state, cache, scheds, skipped_w, work = carry
             loss, g, opt_state = self._map_iter_core(
-                g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, cache, scheds)
+                g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, cache, scheds,
+                unstable=keep, stable_bg=stable_bg)
+            n_opt = jnp.sum((g.alive if stable is None else g.alive & ~stable)
+                            .astype(jnp.int32))
+            progs_w = (jax.vmap(scheduled_trips)(scheds) if self.scheduled
+                       else jax.vmap(
+                           lambda c: tile_trips(c, self.plan.chunk))(
+                               cache.count))
             work = device_work_add(
                 work, jnp.sum(cache.total), w_len * self.pixels,
-                w_len * jnp.sum(g.alive.astype(jnp.int32)))
+                w_len * jnp.sum(g.alive.astype(jnp.int32)),
+                unstable=w_len * n_opt, programs=jnp.sum(progs_w),
+                skipped=jnp.sum(skipped_w))
 
             def rebuild(operand):
-                c, s = operand
+                c, s, sk = operand
                 slot = jnp.mod((it + 1) // stride - 1, w_len)  # round-robin
                 pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0,
                                                     keepdims=False)
-                fresh = self._build_core(g, masked, pose)
+                if keep is None:
+                    fresh = self._build_core(g, masked, pose)
+                else:
+                    fresh, f_sk = self._sparse_build_core(g, masked, keep, pose)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, f_sk, slot,
+                                                             axis=0)
                 c = update_fragment_slot(c, slot, fresh)
                 if self.scheduled:
                     s = update_fragment_slot(s, slot, self._sched_core(fresh))
-                return c, s
+                return c, s, sk
 
-            cache, scheds = jax.lax.cond(
+            cache, scheds, skipped_w = jax.lax.cond(
                 jnp.mod(it + 1, stride) == 0, rebuild, lambda o: o,
-                (cache, scheds))
-            return (g, opt_state, cache, scheds, work), loss
+                (cache, scheds, skipped_w))
+            return (g, opt_state, cache, scheds, skipped_w, work), loss
 
-        (g, opt_state, _, _, work), losses = jax.lax.scan(
-            body, (g, opt_state, cache, scheds, work),
+        (g, opt_state, _, _, _, work), losses = jax.lax.scan(
+            body, (g, opt_state, cache, scheds, skipped_w, work),
             jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
             unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
         # Fresh post-mapping render of the current keyframe (window's last
@@ -390,7 +541,7 @@ class _Stage:
         return g, opt_state, work, losses, image
 
     def _map_scan_masked(self, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
-                         kf_valid, work):
+                         kf_valid, work, stable=None):
         """Fixed-shape variant of :meth:`_map_scan` for the session layer's
         keyframe ring: the window always has ``map_window`` slots and a
         (W,) bool ``kf_valid`` mask marks the V populated ones (a contiguous
@@ -398,41 +549,75 @@ class _Stage:
         the loss, the work counters, the round-robin stride rebuild and the
         final eval — so a half-full ring matches a V-length window exactly,
         while every window fill shares ONE executable (the property the
-        vmapped multi-session step needs)."""
+        vmapped multi-session step needs).
+
+        ``stable`` enables the sparse stable/unstable path exactly as in
+        :meth:`_map_scan` (masked Adam + masked builds + masked schedule);
+        invalid slots contribute zero to the sparsity counters too."""
         stride = self.cfg.map_rebuild_stride
         w_len = kf_w2c.shape[0]
         n_valid = jnp.sum(kf_valid.astype(jnp.int32))
-        cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+        valid_i = kf_valid.astype(jnp.int32)
+        keep = None if stable is None else ~stable
+        if keep is None:
+            cache = jax.vmap(lambda p: self._build_core(g, masked, p))(kf_w2c)
+            skipped_w = jnp.zeros((w_len,), jnp.int32)
+            stable_bg = None
+        else:
+            cache, skipped_w = jax.vmap(
+                lambda p: self._sparse_build_core(g, masked, keep, p))(kf_w2c)
+            # One stable-background render for the whole phase (stable rows
+            # are bit-frozen); invalid slots contribute zero to the one-time
+            # accounting, matching the per-iteration counters.
+            stable_bg, bg_total, bg_progs = self._stable_bg_core(
+                g, masked, stable, kf_w2c)
+            work = work._replace(
+                fragments=work.fragments + jnp.sum(bg_total * valid_i),
+                sched_programs=work.sched_programs + jnp.sum(bg_progs * valid_i))
         scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
 
         def body(carry, it):
-            g, opt_state, cache, scheds, work = carry
+            g, opt_state, cache, scheds, skipped_w, work = carry
             loss, g, opt_state = self._map_iter_core(
                 g, masked, opt_state, kf_w2c, kf_rgb, kf_depth, cache, scheds,
-                kf_valid=kf_valid)
+                kf_valid=kf_valid, unstable=keep, stable_bg=stable_bg)
+            n_opt = jnp.sum((g.alive if stable is None else g.alive & ~stable)
+                            .astype(jnp.int32))
+            progs_w = (jax.vmap(scheduled_trips)(scheds) if self.scheduled
+                       else jax.vmap(
+                           lambda c: tile_trips(c, self.plan.chunk))(
+                               cache.count))
             work = device_work_add(
-                work, jnp.sum(cache.total * kf_valid.astype(jnp.int32)),
+                work, jnp.sum(cache.total * valid_i),
                 n_valid * self.pixels,
-                n_valid * jnp.sum(g.alive.astype(jnp.int32)))
+                n_valid * jnp.sum(g.alive.astype(jnp.int32)),
+                unstable=n_valid * n_opt,
+                programs=jnp.sum(progs_w * valid_i),
+                skipped=jnp.sum(skipped_w * valid_i))
 
             def rebuild(operand):
-                c, s = operand
+                c, s, sk = operand
                 slot = jnp.mod((it + 1) // stride - 1, n_valid)  # round-robin
                 pose = jax.lax.dynamic_index_in_dim(kf_w2c, slot, 0,
                                                     keepdims=False)
-                fresh = self._build_core(g, masked, pose)
+                if keep is None:
+                    fresh = self._build_core(g, masked, pose)
+                else:
+                    fresh, f_sk = self._sparse_build_core(g, masked, keep, pose)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, f_sk, slot,
+                                                             axis=0)
                 c = update_fragment_slot(c, slot, fresh)
                 if self.scheduled:
                     s = update_fragment_slot(s, slot, self._sched_core(fresh))
-                return c, s
+                return c, s, sk
 
-            cache, scheds = jax.lax.cond(
+            cache, scheds, skipped_w = jax.lax.cond(
                 jnp.mod(it + 1, stride) == 0, rebuild, lambda o: o,
-                (cache, scheds))
-            return (g, opt_state, cache, scheds, work), loss
+                (cache, scheds, skipped_w))
+            return (g, opt_state, cache, scheds, skipped_w, work), loss
 
-        (g, opt_state, _, _, work), losses = jax.lax.scan(
-            body, (g, opt_state, cache, scheds, work),
+        (g, opt_state, _, _, _, work), losses = jax.lax.scan(
+            body, (g, opt_state, cache, scheds, skipped_w, work),
             jnp.arange(self.cfg.iters_map, dtype=jnp.int32),
             unroll=min(self.cfg.scan_unroll, self.cfg.iters_map))
         # Eval render of the newest populated slot (the current keyframe).
@@ -537,7 +722,8 @@ class StepEngine:
             losses.append(loss)
             did_fire = False
             if pstate is not None:
-                pstate = pruning.accumulate(pstate, g_params, prune_cfg)
+                pstate = pruning.accumulate(pstate, g_params, prune_cfg,
+                                            alive=g.alive)
                 self.stats.syncs += 1   # boundary check
                 if int(pstate.iters_left) <= 0:
                     fresh = self._call(
@@ -550,15 +736,21 @@ class StepEngine:
                     did_fire = True
             fired.append(did_fire)
         work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
-                          iterations=it_n)
+                          iterations=it_n, unstable_gaussians=0,
+                          sched_programs=0, skipped_fragments=0)
         return TrackResult(xi=xi, g=g, pstate=pstate, work=work,
                            losses=jnp.stack(losses), fired=np.asarray(fired))
 
-    def map_frame(self, g, opt_state, masked, window: List[Tuple]) -> MapResult:
+    def map_frame(self, g, opt_state, masked, window: List[Tuple],
+                  stable=None) -> MapResult:
         """Run the mapping iterations for one keyframe (or the frame-0
         bootstrap).  ``window`` is the host list of (rgb, depth, w2c np)
         keyframes, oldest first; every iteration optimizes the whole window
-        jointly via one batched multi-view render."""
+        jointly via one batched multi-view render.
+
+        ``stable`` (an (N,) bool mask, sparse_opt mode) freezes stable
+        Gaussians out of the Adam step, the fragment builds and the WSU
+        schedule; ``None`` is the dense path."""
         cfg = self.cfg
         st = self.stage(1)
         w_len = len(window)
@@ -570,42 +762,74 @@ class StepEngine:
             work = device_work_zero()
             g, opt_state, work, losses, image = self._call(
                 st.map_scan, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
-                work)
+                work, stable)
             builds = w_len + cfg.iters_map // cfg.map_rebuild_stride
             return MapResult(g=g, opt_state=opt_state, work=work,
                              losses=losses, builds=builds, image=image)
 
         # -- unfused: per-iteration dispatches, per-iteration counter syncs.
-        cache = [self._call(st.build, g, masked, jnp.asarray(w[2]))
-                 for w in window]
+        keep = None if stable is None else ~stable
+
+        def build_slot(w2c):
+            if keep is None:
+                return self._call(st.build, g, masked, w2c), 0
+            frs, sk = self._call(st.build_sparse, g, masked, keep, w2c)
+            self.stats.syncs += 1
+            return frs, int(sk)
+
+        built = [build_slot(jnp.asarray(w[2])) for w in window]
+        cache = [b[0] for b in built]
+        skipped = [b[1] for b in built]
         builds = w_len
-        # Slot totals fetched once per (re)build, not per iteration; the
-        # stacked window cache is likewise re-stacked only when it changes.
+        # Slot totals (and per-slot program counts, the sparse counter)
+        # fetched once per (re)build, not per iteration; the stacked window
+        # cache is likewise re-stacked only when it changes.
         totals = [int(c.total) for c in cache]
-        self.stats.syncs += w_len
+        progs = [int(st.slot_programs(c)) for c in cache]
+        self.stats.syncs += 2 * w_len
         stacked = stack_fragment_lists(cache)
-        fr, px, gi, it_n = 0, 0, 0, 0
+        fr, px, gi, it_n, un, pr, sk_n = 0, 0, 0, 0, 0, 0, 0
+        if stable is None:
+            stable_bg = None
+        else:
+            # One stable-background render for the whole phase (stable rows
+            # are bit-frozen), accounted once — same convention as the
+            # fused scan.
+            stable_bg, bg_total, bg_progs = self._call(
+                st.stable_bg, g, masked, stable, kf_w2c)
+            self.stats.syncs += 2
+            fr += int(jnp.sum(bg_total))
+            pr += int(jnp.sum(bg_progs))
         losses = []
         for it in range(cfg.iters_map):
             loss, g, opt_state = self._call(
                 st.map_iter, g, masked, opt_state, kf_w2c, kf_rgb, kf_depth,
-                stacked)
+                stacked, None, kf_valid=None, unstable=keep,
+                stable_bg=stable_bg)
             self.stats.syncs += 1   # num_alive
+            n_alive = int(g.num_alive())
+            n_opt = (n_alive if stable is None
+                     else int(jnp.sum(g.alive & ~stable)))
             fr += sum(totals)
             px += w_len * st.pixels
-            gi += w_len * int(g.num_alive())
+            gi += w_len * n_alive
+            un += w_len * n_opt
+            pr += sum(progs)
+            sk_n += sum(skipped)
             it_n += 1
             losses.append(loss)
             if (it + 1) % cfg.map_rebuild_stride == 0:
                 slot = ((it + 1) // cfg.map_rebuild_stride - 1) % w_len
-                cache[slot] = self._call(
-                    st.build, g, masked, jnp.asarray(window[slot][2]))
+                cache[slot], skipped[slot] = build_slot(
+                    jnp.asarray(window[slot][2]))
                 totals[slot] = int(cache[slot].total)
-                self.stats.syncs += 1
+                progs[slot] = int(st.slot_programs(cache[slot]))
+                self.stats.syncs += 2
                 stacked = stack_fragment_lists(cache)
                 builds += 1
         work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
-                          iterations=it_n)
+                          iterations=it_n, unstable_gaussians=un,
+                          sched_programs=pr, skipped_fragments=sk_n)
         image = self._call(st.render_eval, g, masked, kf_w2c[-1])
         return MapResult(g=g, opt_state=opt_state, work=work,
                          losses=jnp.stack(losses), builds=builds, image=image)
@@ -624,7 +848,9 @@ class StepEngine:
         base = jnp.asarray(base_w2c)
         track_px = (self.intr.height // 4) * (self.intr.width // 4)
         work = DeviceWork(fragments=0, pixels=track_px * cfg.iters_track,
-                          gaussians_iters=0, iterations=cfg.iters_track)
+                          gaussians_iters=0, iterations=cfg.iters_track,
+                          unstable_gaussians=0, sched_programs=0,
+                          skipped_fragments=0)
         if cfg.fused:
             xi = self._call(self._geo, base, pts_w, cols, valid, rgb, depth)
             return xi, work

@@ -28,27 +28,49 @@ import numpy as np
 
 
 class DeviceWork(NamedTuple):
-    """Per-frame on-device work accumulator (int32 scalars)."""
+    """Per-frame on-device work accumulator (int32 scalars).
+
+    The last three fields are the sparse stable/unstable counters, and all
+    three count **mapping** work only — tracking optimizes the pose, not
+    Gaussian params, so it contributes zero to each.  In dense mode
+    ``unstable_gaussians`` equals the mapping share of ``gaussians_iters``
+    (every alive Gaussian is optimized each mapping iteration),
+    ``sched_programs`` counts the subtile programs (chunk trips) mapping
+    rasterization streams, and ``skipped_fragments`` is 0 (nothing is
+    dropped)."""
 
     fragments: jnp.ndarray       # tile-Gaussian intersections processed
     pixels: jnp.ndarray          # pixels rendered
     gaussians_iters: jnp.ndarray  # alive Gaussians x iterations
     iterations: jnp.ndarray
+    unstable_gaussians: jnp.ndarray  # optimized Gaussians x mapping iters
+    sched_programs: jnp.ndarray      # mapping subtile programs (chunk trips)
+    skipped_fragments: jnp.ndarray   # fragments dropped by the stable mask
 
 
 def device_work_zero() -> DeviceWork:
     z = jnp.zeros((), jnp.int32)
-    return DeviceWork(fragments=z, pixels=z, gaussians_iters=z, iterations=z)
+    return DeviceWork(fragments=z, pixels=z, gaussians_iters=z, iterations=z,
+                      unstable_gaussians=z, sched_programs=z,
+                      skipped_fragments=z)
 
 
-def device_work_add(w: DeviceWork, fragments, pixels, alive) -> DeviceWork:
-    """jit/scan-safe equivalent of ``WorkCounters.add``; all args () int32."""
+def device_work_add(w: DeviceWork, fragments, pixels, alive,
+                    unstable=None, programs=0, skipped=0) -> DeviceWork:
+    """jit/scan-safe equivalent of ``WorkCounters.add``; all args () int32.
+    ``unstable`` defaults to ``alive`` (dense mode: every alive Gaussian is
+    optimized)."""
     one = jnp.asarray(1, jnp.int32)
+    if unstable is None:
+        unstable = alive
     return DeviceWork(
         fragments=w.fragments + jnp.asarray(fragments, jnp.int32),
         pixels=w.pixels + jnp.asarray(pixels, jnp.int32),
         gaussians_iters=w.gaussians_iters + jnp.asarray(alive, jnp.int32),
         iterations=w.iterations + one,
+        unstable_gaussians=w.unstable_gaussians + jnp.asarray(unstable, jnp.int32),
+        sched_programs=w.sched_programs + jnp.asarray(programs, jnp.int32),
+        skipped_fragments=w.skipped_fragments + jnp.asarray(skipped, jnp.int32),
     )
 
 
@@ -120,6 +142,10 @@ class WorkCounters:
     gaussians_iters: int = 0  # alive Gaussians x iterations (pruning reduces)
     iterations: int = 0
     frames: int = 0
+    unstable_gaussians: int = 0  # optimized Gaussians x mapping iters
+    #                              (sparse_opt reduces)
+    sched_programs: int = 0      # mapping subtile programs (chunk trips)
+    skipped_fragments: int = 0   # fragments dropped by the stable mask
 
     def add(self, fragments: int, pixels: int, alive: int):
         self.fragments += int(fragments)
@@ -134,6 +160,9 @@ class WorkCounters:
         self.pixels += int(dev.pixels)
         self.gaussians_iters += int(dev.gaussians_iters)
         self.iterations += int(dev.iterations)
+        self.unstable_gaussians += int(dev.unstable_gaussians)
+        self.sched_programs += int(dev.sched_programs)
+        self.skipped_fragments += int(dev.skipped_fragments)
 
     def merged_with(self, other: "WorkCounters") -> "WorkCounters":
         return WorkCounters(
@@ -142,4 +171,7 @@ class WorkCounters:
             gaussians_iters=self.gaussians_iters + other.gaussians_iters,
             iterations=self.iterations + other.iterations,
             frames=self.frames + other.frames,
+            unstable_gaussians=self.unstable_gaussians + other.unstable_gaussians,
+            sched_programs=self.sched_programs + other.sched_programs,
+            skipped_fragments=self.skipped_fragments + other.skipped_fragments,
         )

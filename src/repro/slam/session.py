@@ -108,6 +108,11 @@ class SLAMConfig:
     seed_stride: int = 3            # initial map seeding grid stride
     seed_opacity: float = 0.7
     fused: bool = True              # scan-fused engine vs per-iteration loop
+    sparse_opt: bool = False        # sparse stable/unstable mapping: freeze
+                                    # stable Gaussians out of the Adam step,
+                                    # the fragment build and the WSU
+                                    # schedule (requires prune; False is the
+                                    # dense bitwise oracle)
     map_rebuild_stride: int = 6     # mapping fragment-list rebuild cadence
     scan_unroll: int = 4            # lax.scan unroll (XLA:CPU runs rolled
                                     # loop bodies ~30% slower; unrolling
@@ -442,11 +447,14 @@ def _make_row_step(meta: SessionMeta, factor: int):
                 sess.prev_rgb, sess.prev_depth, sess.pose, intr, stride=4)
             xi = geo_scan(base, pts_w, cols, valid, rgb, depth)
             track_px = (intr.height // 4) * (intr.width // 4)
+            zero = jnp.asarray(0, jnp.int32)
             work_t = DeviceWork(
-                fragments=jnp.asarray(0, jnp.int32),
+                fragments=zero,
                 pixels=jnp.asarray(track_px * k_track, jnp.int32),
-                gaussians_iters=jnp.asarray(0, jnp.int32),
-                iterations=jnp.asarray(k_track, jnp.int32))
+                gaussians_iters=zero,
+                iterations=jnp.asarray(k_track, jnp.int32),
+                unstable_gaussians=zero, sched_programs=zero,
+                skipped_fragments=zero)
             track_losses = jnp.zeros((k_track,), jnp.float32)
             fired = jnp.zeros((k_track,), bool)
         else:
@@ -476,15 +484,32 @@ def _make_row_step(meta: SessionMeta, factor: int):
         # -- mapping (keyframes only) under lax.cond ----------------------
         key = jax.random.fold_in(sess.rng, idx)
         w_slots = cfg.map_window
+        # Sparse stable/unstable mapping: the stability bit maintained by
+        # the tracking scan above freezes stable Gaussians through the
+        # mapping dispatch.  PruneState rides the cond operand only in
+        # sparse mode so the dense trace stays the pre-sparse oracle.
+        sparse = bool(getattr(cfg, "sparse_opt", False))
 
         def map_branch(op):
-            (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
-             kf_psnr_buf, frags_l, sched_l) = op
+            if sparse:
+                (g, map_opt, pstate_b, kf_rgb, kf_depth, kf_w2c, kf_count,
+                 kf_total, kf_psnr_buf, frags_l, sched_l) = op
+            else:
+                (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
+                 kf_psnr_buf, frags_l, sched_l) = op
+                pstate_b = None
             # Eval render at the tracked pose drives densification.
             out = render(silence(g, masked), Camera(intr, new_pose),
                          st_1.plan)
-            g = _densify_core(g, rgb, depth, out.image, new_pose, intr, cfg,
-                              key)
+            g2 = _densify_core(g, rgb, depth, out.image, new_pose, intr, cfg,
+                               key)
+            stable = None
+            if sparse:
+                # Newcomers land in previously-dead slots whose stale
+                # EMA/age could freeze them at birth — reset those rows.
+                pstate_b = pruning.mark_born(pstate_b, g2.alive & ~g.alive)
+                stable = pstate_b.stable
+            g = g2
             opt0 = Adam(lr=cfg.lr_map).init(G.params_of(g))
             kf_rgb = _push_ring(kf_rgb, rgb, kf_count)
             kf_depth = _push_ring(kf_depth, depth, kf_count)
@@ -492,36 +517,50 @@ def _make_row_step(meta: SessionMeta, factor: int):
             n2 = jnp.minimum(kf_count + 1, w_slots)
             kf_valid = jnp.arange(w_slots) < n2
             g, map_opt, work_m, map_losses, image = st_1._map_scan_masked(
-                g, masked, opt0, kf_w2c, kf_rgb, kf_depth, kf_valid, work0)
+                g, masked, opt0, kf_w2c, kf_rgb, kf_depth, kf_valid, work0,
+                stable)
             psnr_v = psnr_dev(image, rgb)
             kf_psnr_buf = kf_psnr_buf.at[kf_total].set(psnr_v)
             # Refresh the cached stage-1 fragment lists (+ WSU schedule) of
             # the current map at the new keyframe pose — the session's
-            # serving cache for external renders.
+            # serving cache for external renders (always dense: external
+            # renders see the whole map).
             frags_l = st_1._build_core(g, masked, new_pose)
             sched_l = (build_schedule(frags_l.count, st_1.plan.chunk,
                                       bucket=cfg.sched_bucket,
                                       max_trips=st_1.plan.max_trips)
                        if st_1.scheduled else sched_l)
-            return (g, map_opt, kf_rgb, kf_depth, kf_w2c, n2, kf_total + 1,
-                    kf_psnr_buf, frags_l, sched_l, work_m, map_losses,
-                    psnr_v)
+            ret = (g, map_opt, kf_rgb, kf_depth, kf_w2c, n2, kf_total + 1,
+                   kf_psnr_buf, frags_l, sched_l, work_m, map_losses,
+                   psnr_v)
+            return ret + (pstate_b,) if sparse else ret
 
         def skip_branch(op):
-            (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
-             kf_psnr_buf, frags_l, sched_l) = op
-            return (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
-                    kf_psnr_buf, frags_l, sched_l, device_work_zero(),
-                    jnp.zeros((cfg.iters_map,), jnp.float32),
-                    jnp.asarray(jnp.nan, jnp.float32))
+            if sparse:
+                (g, map_opt, pstate_b, kf_rgb, kf_depth, kf_w2c, kf_count,
+                 kf_total, kf_psnr_buf, frags_l, sched_l) = op
+            else:
+                (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
+                 kf_psnr_buf, frags_l, sched_l) = op
+                pstate_b = None
+            ret = (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
+                   kf_psnr_buf, frags_l, sched_l, device_work_zero(),
+                   jnp.zeros((cfg.iters_map,), jnp.float32),
+                   jnp.asarray(jnp.nan, jnp.float32))
+            return ret + (pstate_b,) if sparse else ret
 
+        operand = ((g, sess.map_opt, pstate, sess.kf_rgb, sess.kf_depth,
+                    sess.kf_w2c, sess.kf_count, sess.kf_total, sess.kf_psnr,
+                    sess.frags, sess.sched) if sparse else
+                   (g, sess.map_opt, sess.kf_rgb, sess.kf_depth, sess.kf_w2c,
+                    sess.kf_count, sess.kf_total, sess.kf_psnr, sess.frags,
+                    sess.sched))
+        cond_out = jax.lax.cond(is_kf, map_branch, skip_branch, operand)
+        if sparse:
+            pstate = cond_out[-1]
+            cond_out = cond_out[:-1]
         (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
-         kf_psnr_buf, frags_l, sched_l, work_m, map_losses, psnr_v) = \
-            jax.lax.cond(
-                is_kf, map_branch, skip_branch,
-                (g, sess.map_opt, sess.kf_rgb, sess.kf_depth, sess.kf_w2c,
-                 sess.kf_count, sess.kf_total, sess.kf_psnr, sess.frags,
-                 sess.sched))
+         kf_psnr_buf, frags_l, sched_l, work_m, map_losses, psnr_v) = cond_out
 
         alive_now = g.num_alive()
         step_work = device_work_merge(work_t, work_m)
@@ -769,7 +808,10 @@ def session_finalize(session: SlamSession, gt_w2c=None, *,
     counters = WorkCounters(
         fragments=int(work.fragments), pixels=int(work.pixels),
         gaussians_iters=int(work.gaussians_iters),
-        iterations=int(work.iterations), frames=n)
+        iterations=int(work.iterations), frames=n,
+        unstable_gaussians=int(work.unstable_gaussians),
+        sched_programs=int(work.sched_programs),
+        skipped_fragments=int(work.skipped_fragments))
     return SLAMResult(
         est_w2c=est,
         gt_w2c=gt,
@@ -953,8 +995,16 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
     if is_kf:
         rendered = eng.render_eval(g, masked, new_pose)
         key = jax.random.fold_in(sess.rng, idx)
-        g = _densify_jit(meta)(g, rgb, depth, rendered, new_pose, key)
+        g2 = _densify_jit(meta)(g, rgb, depth, rendered, new_pose, key)
         stats.dispatches += 1
+        stable = None
+        if getattr(cfg, "sparse_opt", False):
+            # Mirror the fused map_branch: reset stability state of
+            # densified newcomers, then freeze the stable set.
+            pstate = pruning.mark_born(pstate, g2.alive & ~g.alive)
+            stable = pstate.stable
+        g = g2
+        keep = None if stable is None else ~stable
         map_opt = Adam(lr=cfg.lr_map).init(G.params_of(g))
         kcount = jnp.asarray(kf_count, jnp.int32)
         kf_rgb = _push_ring(kf_rgb, rgb, kcount)
@@ -962,36 +1012,66 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
         kf_w2c = _push_ring(kf_w2c, new_pose, kcount)
         n2 = min(kf_count + 1, cfg.map_window)
         kf_valid = jnp.arange(cfg.map_window) < n2
+
+        def build_slot(pose):
+            if keep is None:
+                return eng._call(st_1.build, g, masked, pose), 0
+            frs, sk = eng._call(st_1.build_sparse, g, masked, keep, pose)
+            stats.syncs += 1
+            return frs, int(sk)
+
         # Per-iteration mapping over the masked ring (dispatch + sync per
         # iteration — the baseline's cost shape).  Invalid cache rows only
         # need to be finite: duplicate slot 0's build.
-        cache_rows = [eng._call(st_1.build, g, masked, kf_w2c[i])
-                      for i in range(n2)]
+        built = [build_slot(kf_w2c[i]) for i in range(n2)]
+        cache_rows = [b[0] for b in built]
+        skipped = [b[1] for b in built]
         cache_rows += [cache_rows[0]] * (cfg.map_window - n2)
         totals = [int(c.total) for c in cache_rows[:n2]]
-        stats.syncs += n2
+        progs = [int(st_1.slot_programs(c)) for c in cache_rows[:n2]]
+        stats.syncs += 2 * n2
         stacked = stack_fragment_lists(cache_rows)
-        fr = px = gi = it_n = 0
+        fr = px = gi = it_n = un = pr = sk_n = 0
+        stable_bg = None
+        if keep is not None:
+            # One stable-background render for the whole phase (stable
+            # rows are bit-frozen), composited under every iteration's
+            # unstable render and accounted once over the valid slots —
+            # the fused _map_scan_masked convention.
+            stable_bg, bg_total, bg_progs = eng._call(
+                st_1.stable_bg, g, masked, stable, kf_w2c)
+            stats.syncs += 2
+            fr += int(jnp.sum(bg_total[:n2]))
+            pr += int(jnp.sum(bg_progs[:n2]))
         losses = []
         for it in range(cfg.iters_map):
             loss, g, map_opt = eng._call(
                 st_1.map_iter, g, masked, map_opt, kf_w2c, kf_rgb, kf_depth,
-                stacked, None, kf_valid=kf_valid)
+                stacked, None, kf_valid=kf_valid, unstable=keep,
+                stable_bg=stable_bg)
             stats.syncs += 1
+            n_alive = int(g.num_alive())
+            n_opt = (n_alive if stable is None
+                     else int(jnp.sum(g.alive & ~stable)))
             fr += sum(totals)
             px += n2 * st_1.pixels
-            gi += n2 * int(g.num_alive())
+            gi += n2 * n_alive
+            un += n2 * n_opt
+            pr += sum(progs)
+            sk_n += sum(skipped)
             it_n += 1
             losses.append(loss)
             if (it + 1) % cfg.map_rebuild_stride == 0:
                 slot = ((it + 1) // cfg.map_rebuild_stride - 1) % n2
-                fresh = eng._call(st_1.build, g, masked, kf_w2c[slot])
+                fresh, skipped[slot] = build_slot(kf_w2c[slot])
                 totals[slot] = int(fresh.total)
-                stats.syncs += 1
+                progs[slot] = int(st_1.slot_programs(fresh))
+                stats.syncs += 2
                 stacked = update_fragment_slot(
                     stacked, jnp.asarray(slot, jnp.int32), fresh)
         work_m = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
-                            iterations=it_n)
+                            iterations=it_n, unstable_gaussians=un,
+                            sched_programs=pr, skipped_fragments=sk_n)
         map_losses = jnp.stack(losses)
         image = eng.render_eval(g, masked, kf_w2c[n2 - 1])
         psnr_v = psnr_dev(image, rgb)

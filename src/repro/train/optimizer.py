@@ -75,6 +75,27 @@ class Adam:
             updates = jax.tree.map(upd, mu, nu, params)
         return updates, AdamState(step=step, mu=mu, nu=nu)
 
+    def update_masked(self, grads, state: AdamState, row_mask, params=None):
+        """Row-masked :meth:`update` for the sparse stable/unstable path:
+        rows where ``row_mask`` is False (stable Gaussians) get a zero
+        update and keep their first/second moments untouched, so a frozen
+        Gaussian's optimizer state is exactly what it was when it froze.
+        The shared () step counter still advances (bias correction is a
+        global scalar).
+
+        With an all-True mask this is **bitwise-equal** to :meth:`update`
+        (``jnp.where(True, new, old) == new``) — the dense oracle the
+        sparse engine tests hold it to.  ``row_mask`` is (N,) bool and
+        broadcasts over each leaf's trailing dims."""
+        updates, new = self.update(grads, state, params)
+        sel = lambda n, o: jnp.where(_row_mask(row_mask, n), n, o)
+        return (
+            jax.tree.map(lambda u: sel(u, jnp.zeros_like(u)), updates),
+            AdamState(step=new.step,
+                      mu=jax.tree.map(sel, new.mu, state.mu),
+                      nu=jax.tree.map(sel, new.nu, state.nu)),
+        )
+
 
 class SGDState(NamedTuple):
     step: jnp.ndarray
@@ -98,8 +119,25 @@ class SGD:
         return updates, SGDState(step=state.step + 1, momentum=mom)
 
 
+def _row_mask(mask, x):
+    """Broadcast a (N,) row mask over a (N, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (x.ndim - 1))
+
+
 def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def apply_updates_masked(params, updates, row_mask):
+    """:func:`apply_updates` restricted to rows where ``row_mask`` is True.
+
+    Frozen rows return the ORIGINAL param array values (a ``where`` select,
+    not ``p + 0``, which would flip ``-0.0`` to ``+0.0``) — stable Gaussians
+    stay bit-frozen across mapping iterations.  All-True mask ==
+    :func:`apply_updates` bitwise."""
+    def one(p, u):
+        return jnp.where(_row_mask(row_mask, p), p + u.astype(p.dtype), p)
+    return jax.tree.map(one, params, updates)
 
 
 def global_norm(tree) -> jnp.ndarray:

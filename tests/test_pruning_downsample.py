@@ -151,3 +151,114 @@ def test_downsample_depth_ignores_invalid():
     assert float(out[0, 0]) == 2.0  # only the valid sample counts
     d0 = jnp.zeros((2, 2))
     assert float(downsample_depth(d0, 2)[0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# stability bit (sparse stable/unstable optimization)
+# ---------------------------------------------------------------------------
+
+def test_accumulate_stability_bit_rule():
+    """beta=0 makes the EMA the raw Eq.7 score: rows below stable_rel x the
+    alive mean for stable_age consecutive iterations freeze; dead rows
+    never do; one loud iteration thaws and resets the age."""
+    n = 4
+    cfg = pruning.PruneConfig(stable_ema_beta=0.0, stable_rel=0.5,
+                              stable_age=2, stable_thresh=0.0)
+    alive = jnp.asarray([True, True, True, False])
+    g = _field(n, alive)
+    state = pruning.init_state(g, num_tiles=4, cfg=cfg)
+    quiet = _grads(n, jnp.asarray([0.1, 10.0, 0.1, 0.0]))
+    # alive-mean score = (0.1 + 10 + 0.1)/3 ≈ 3.4, thresh ≈ 1.7
+    state = pruning.accumulate(state, quiet, cfg, alive=alive)
+    np.testing.assert_array_equal(np.asarray(state.age), [1, 0, 1, 0])
+    assert not np.asarray(state.stable).any()   # age < stable_age
+    state = pruning.accumulate(state, quiet, cfg, alive=alive)
+    np.testing.assert_array_equal(np.asarray(state.stable),
+                                  [True, False, True, False])
+    np.testing.assert_array_equal(np.asarray(pruning.optimizable_mask(state)),
+                                  [False, True, False, True])
+    # a loud iteration thaws row 0 and resets its age
+    loud = _grads(n, jnp.asarray([10.0, 10.0, 0.1, 0.0]))
+    state = pruning.accumulate(state, loud, cfg, alive=alive)
+    assert not bool(state.stable[0]) and int(state.age[0]) == 0
+    assert bool(state.stable[2])
+
+
+def test_stable_warmup_gates_freezing():
+    """During warmup the EMA/age mature but the bit never sets; the moment
+    the opt_steps clock passes stable_warmup, already-quiet rows freeze on
+    the very next accumulate (no extra stable_age wait)."""
+    n = 4
+    cfg = pruning.PruneConfig(stable_ema_beta=0.0, stable_rel=0.5,
+                              stable_age=2, stable_thresh=0.0,
+                              stable_warmup=5)
+    alive = jnp.asarray([True, True, True, False])
+    g = _field(n, alive)
+    state = pruning.init_state(g, num_tiles=4, cfg=cfg)
+    quiet = _grads(n, jnp.asarray([0.1, 10.0, 0.1, 0.0]))
+    for it in range(4):
+        state = pruning.accumulate(state, quiet, cfg, alive=alive)
+        assert not np.asarray(state.stable).any(), f"froze during warmup it={it}"
+    # ages kept maturing during warmup...
+    np.testing.assert_array_equal(np.asarray(state.age), [4, 0, 4, 0])
+    assert int(state.opt_steps) == 4
+    # ...so the first post-warmup accumulate freezes the quiet rows at once.
+    state = pruning.accumulate(state, quiet, cfg, alive=alive)
+    np.testing.assert_array_equal(np.asarray(state.stable),
+                                  [True, False, True, False])
+
+
+def test_accumulate_without_alive_keeps_stability_leaves():
+    """The pre-stability call shape (tracking without the alive mask) must
+    not touch the stability leaves."""
+    n = 8
+    cfg = pruning.PruneConfig()
+    state = pruning.init_state(_field(n), num_tiles=4, cfg=cfg)
+    state = state._replace(stable=jnp.asarray([True] * 4 + [False] * 4),
+                           age=jnp.full((n,), 3, jnp.int32))
+    out = pruning.accumulate(state, _grads(n, jnp.ones((n,))), cfg)
+    np.testing.assert_array_equal(np.asarray(out.stable), np.asarray(state.stable))
+    np.testing.assert_array_equal(np.asarray(out.age), np.asarray(state.age))
+    np.testing.assert_array_equal(np.asarray(out.grad_ema),
+                                  np.asarray(state.grad_ema))
+
+
+def test_mark_born_resets_newcomers():
+    n = 6
+    state = pruning.init_state(_field(n), num_tiles=4, cfg=pruning.PruneConfig())
+    state = state._replace(grad_ema=jnp.ones((n,)),
+                           age=jnp.full((n,), 9, jnp.int32),
+                           stable=jnp.ones((n,), bool))
+    born = jnp.asarray([False, True, False, True, False, False])
+    out = pruning.mark_born(state, born)
+    b = np.asarray(born)
+    assert not np.asarray(out.stable)[b].any()
+    assert not np.asarray(out.age)[b].any()
+    assert not np.asarray(out.grad_ema)[b].any()
+    assert np.asarray(out.stable)[~b].all()
+    np.testing.assert_array_equal(np.asarray(out.age)[~b], 9)
+
+
+def test_retile_carries_stability_leaves():
+    """A downsample-factor grid switch reshapes only ``prev_tile_count``;
+    the (N,) stability leaves must ride through bit-untouched (a retile
+    must never thaw or freeze anything)."""
+    n = 32
+    g = _field(n)
+    state = pruning.init_state(g, num_tiles=4, cfg=pruning.PruneConfig())
+    ema = jnp.linspace(0.0, 1.0, n)
+    age = (jnp.arange(n) % 5).astype(jnp.int32)
+    stable = (jnp.arange(n) % 3) == 0
+    state = state._replace(grad_ema=ema, age=age, stable=stable,
+                           prev_tile_count=jnp.arange(4, dtype=jnp.int32))
+    baselines = {}
+    st2 = pruning.retile_state(state, num_tiles=16, baselines=baselines)
+    assert st2.prev_tile_count.shape == (16,)
+    assert np.asarray(st2.grad_ema).tobytes() == np.asarray(ema).tobytes()
+    assert np.asarray(st2.age).tobytes() == np.asarray(age).tobytes()
+    assert np.asarray(st2.stable).tobytes() == np.asarray(stable).tobytes()
+    # switching back restores the parked baseline, leaves still untouched
+    st3 = pruning.retile_state(st2, num_tiles=4, baselines=baselines)
+    np.testing.assert_array_equal(np.asarray(st3.prev_tile_count),
+                                  np.arange(4))
+    assert np.asarray(st3.stable).tobytes() == np.asarray(stable).tobytes()

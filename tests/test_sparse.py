@@ -1,0 +1,444 @@
+"""Sparse stable/unstable optimization tests.
+
+The contract of the sparse path, bottom to top:
+
+* optimizer — ``Adam.update_masked`` / ``apply_updates_masked`` with an
+  all-True row mask are **bitwise** the dense ``update`` / ``apply_updates``;
+  False rows get zero updates, untouched moments and bit-frozen params;
+* counters — ``active_programs`` / ``active_tile_programs`` count programs
+  with work, and ``count_skipped_fragments`` is exactly the dense-minus-
+  sparse fragment total;
+* engine — ``map_frame`` with ``stable`` all-False is bitwise the dense
+  path (fused and unfused), a partial mask bit-freezes the stable rows,
+  and fused/unfused sparse agree on every work counter;
+* session — ``sparse_opt=True`` with a never-firing stability rule replays
+  the dense run bitwise, keeps 1 dispatch/frame-step (solo and stacked),
+  and with an aggressive rule actually freezes Gaussians: the run's
+  ``unstable_gaussians`` drops below ``gaussians_iters``, fragments are
+  skipped, and frozen rows' params never move.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gaussians as G
+from repro.core import pruning, schedule
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.core.sorting import build_fragment_lists, count_skipped_fragments
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.engine import EngineStats, StepEngine
+from repro.slam.session import SLAMConfig, _seed_map
+from repro.train.optimizer import (
+    Adam,
+    apply_updates,
+    apply_updates_masked,
+)
+
+
+def _cfg(**kw):
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return SLAMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return make_dataset("room0", num_frames=5, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48)
+
+
+def _fresh(tree):
+    return jax.tree.map(jnp.array, tree)
+
+
+def _bytes(tree):
+    return [np.asarray(l).tobytes() for l in jax.tree.leaves(tree)]
+
+
+def _work7(w):
+    return tuple(int(x) for x in w)
+
+
+# ---------------------------------------------------------------------------
+# optimizer: masked Adam vs the dense oracle
+# ---------------------------------------------------------------------------
+
+def _toy(key, n=8):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (n, 3)),
+            "b": jax.random.normal(k2, (n,))}
+
+
+def test_update_masked_all_true_is_dense_bitwise():
+    params = _toy(jax.random.PRNGKey(0))
+    grads = _toy(jax.random.PRNGKey(1))
+    opt = Adam(lr=1e-2)
+    state = opt.init(params)
+    # two steps so nonzero moments feed the second update
+    for _ in range(2):
+        upd_d, st_d = opt.update(grads, state)
+        upd_m, st_m = opt.update_masked(grads, state, jnp.ones((8,), bool))
+        assert _bytes(upd_m) == _bytes(upd_d)
+        assert _bytes(st_m) == _bytes(st_d)
+        assert _bytes(apply_updates_masked(params, upd_m, jnp.ones((8,), bool))) \
+            == _bytes(apply_updates(params, upd_d))
+        params = apply_updates(params, upd_d)
+        state = st_d
+
+
+def test_update_masked_freezes_false_rows():
+    params = _toy(jax.random.PRNGKey(2))
+    grads = _toy(jax.random.PRNGKey(3))
+    opt = Adam(lr=1e-2)
+    state = opt.init(params)
+    # warm the moments so the frozen-moment check is non-trivial
+    upd, state = opt.update(grads, state)
+    params = apply_updates(params, upd)
+
+    mask = jnp.asarray([True, False, True, False, True, True, False, True])
+    upd_m, st_m = opt.update_masked(grads, state, mask)
+    upd_d, st_d = opt.update(grads, state)
+    new_p = apply_updates_masked(params, upd_m, mask)
+    m = np.asarray(mask)
+    for name in ("a", "b"):
+        # frozen rows: zero update, moments and params bit-untouched
+        assert not np.asarray(upd_m[name])[~m].any()
+        assert np.asarray(st_m.mu[name])[~m].tobytes() == \
+            np.asarray(state.mu[name])[~m].tobytes()
+        assert np.asarray(st_m.nu[name])[~m].tobytes() == \
+            np.asarray(state.nu[name])[~m].tobytes()
+        assert np.asarray(new_p[name])[~m].tobytes() == \
+            np.asarray(params[name])[~m].tobytes()
+        # live rows: exactly the dense step
+        assert np.asarray(upd_m[name])[m].tobytes() == \
+            np.asarray(upd_d[name])[m].tobytes()
+        assert np.asarray(st_m.mu[name])[m].tobytes() == \
+            np.asarray(st_d.mu[name])[m].tobytes()
+    # the shared bias-correction step still advances
+    assert int(st_m.step) == int(st_d.step)
+
+
+def test_apply_updates_masked_preserves_negative_zero():
+    # a frozen -0.0 must stay -0.0: the masked apply is a where-select,
+    # not `p + 0`, which would flip the sign bit
+    params = {"a": jnp.asarray([-0.0, 1.0])}
+    upd = {"a": jnp.asarray([5.0, 5.0])}
+    out = apply_updates_masked(params, upd, jnp.asarray([False, True]))
+    assert np.asarray(out["a"]).tobytes() == \
+        np.asarray([-0.0, 6.0], np.float32).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# counters: active programs + exact skipped-fragment accounting
+# ---------------------------------------------------------------------------
+
+def test_active_programs_counts_pairs_with_work():
+    counts = jnp.asarray([5, 0, 0, 3, 0, 0, 0, 9], jnp.int32)
+    sched = schedule.build_schedule(counts, chunk=4)
+    # 3 loaded tiles, 8 tiles -> pairing puts each with a zero tile: 3 of
+    # the 4 pair programs stream fragments
+    assert int(schedule.active_programs(sched)) == 3
+    assert int(schedule.active_tile_programs(counts)) == 3
+    # all tiles loaded -> every pair works
+    full = jnp.arange(1, 9, dtype=jnp.int32)
+    assert int(schedule.active_programs(schedule.build_schedule(full, chunk=4))) == 4
+    assert int(schedule.active_tile_programs(full)) == 8
+    # nothing loaded -> zero programs
+    zero = jnp.zeros((8,), jnp.int32)
+    assert int(schedule.active_programs(schedule.build_schedule(zero, chunk=4))) == 0
+    assert int(schedule.active_tile_programs(zero)) == 0
+
+
+def test_scheduled_trips_counts_subtile_programs():
+    counts = jnp.asarray([5, 0, 0, 3, 0, 0, 0, 9], jnp.int32)
+    # ceil(5/4) + ceil(3/4) + ceil(9/4) = 2 + 1 + 3
+    sched = schedule.build_schedule(counts, chunk=4)
+    assert int(schedule.scheduled_trips(sched)) == 6
+    # pairing only reorders tiles, so trips match the unscheduled per-tile
+    # capacity loop exactly
+    assert int(schedule.tile_trips(counts, 4)) == 6
+    # stable-only (empty) tiles contribute zero trips even though their
+    # pair programs stay active — the granularity sparsity is visible at
+    zero = jnp.zeros((8,), jnp.int32)
+    assert int(schedule.scheduled_trips(schedule.build_schedule(zero, chunk=4))) == 0
+    assert int(schedule.tile_trips(zero, 4)) == 0
+    full = jnp.arange(1, 9, dtype=jnp.int32)
+    want = sum((c + 3) // 4 for c in range(1, 9))
+    assert int(schedule.scheduled_trips(schedule.build_schedule(full, chunk=4))) == want
+    assert int(schedule.tile_trips(full, 4)) == want
+
+
+def test_count_skipped_fragments_is_exact(tiny_scene):
+    proj, grid = tiny_scene["proj"], tiny_scene["grid"]
+    n = proj.valid.shape[0]
+    keep = jax.random.bernoulli(jax.random.PRNGKey(7), 0.6, (n,))
+    cap = 512  # ample; .total is pre-capacity either way
+    dense = build_fragment_lists(proj, grid, cap)
+    sparse = build_fragment_lists(proj, grid, cap, keep=keep)
+    skipped = count_skipped_fragments(proj, grid, keep)
+    assert int(skipped) > 0
+    assert int(dense.total) - int(sparse.total) == int(skipped)
+    # all-True keep: nothing skipped, lists bitwise identical to keep=None
+    all_keep = jnp.ones((n,), bool)
+    assert int(count_skipped_fragments(proj, grid, all_keep)) == 0
+    same = build_fragment_lists(proj, grid, cap, keep=all_keep)
+    assert _bytes(same) == _bytes(dense)
+
+
+# ---------------------------------------------------------------------------
+# engine: map_frame under a stability mask
+# ---------------------------------------------------------------------------
+
+def _map_inputs(scene, cfg):
+    g = _seed_map(scene, cfg)
+    masked = jnp.zeros((cfg.capacity,), bool)
+    window = [(scene.frames[i].rgb, scene.frames[i].depth,
+               scene.frames[i].w2c_gt.copy()) for i in (0, 1)]
+    return g, masked, window
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_map_frame_all_unstable_is_dense_bitwise(scene, fused):
+    cfg = _cfg(fused=fused)
+    g, masked, window = _map_inputs(scene, cfg)
+    opt = Adam(lr=cfg.lr_map)
+    eng = StepEngine(scene.intrinsics, cfg)
+
+    mr_d = eng.map_frame(_fresh(g), opt.init(G.params_of(g)), masked, window)
+    mr_s = eng.map_frame(_fresh(g), opt.init(G.params_of(g)), masked, window,
+                         stable=jnp.zeros((cfg.capacity,), bool))
+
+    assert _bytes(G.params_of(mr_s.g)) == _bytes(G.params_of(mr_d.g))
+    assert _bytes(mr_s.opt_state) == _bytes(mr_d.opt_state)
+    assert np.asarray(mr_s.losses).tobytes() == np.asarray(mr_d.losses).tobytes()
+    ws, wd = mr_s.work, mr_d.work
+    assert _work7(ws) == _work7(wd)
+    # all-unstable: every alive Gaussian is optimized, nothing skipped
+    assert int(ws.unstable_gaussians) == int(ws.gaussians_iters)
+    assert int(ws.skipped_fragments) == 0
+    assert int(ws.sched_programs) == int(wd.sched_programs)
+
+
+def test_map_frame_partial_stable_rows_bit_frozen(scene):
+    cfg = _cfg(fused=True)
+    g, masked, window = _map_inputs(scene, cfg)
+    # freeze every other alive Gaussian
+    stable = g.alive & ((jnp.arange(cfg.capacity) % 2) == 0)
+    assert int(jnp.sum(stable)) > 0
+    opt = Adam(lr=cfg.lr_map)
+    eng = StepEngine(scene.intrinsics, cfg)
+    mr = eng.map_frame(_fresh(g), opt.init(G.params_of(g)), masked, window,
+                       stable=stable)
+
+    p0 = jax.device_get(G.params_of(g))
+    p1 = jax.device_get(G.params_of(mr.g))
+    s = np.asarray(stable)
+    unstable_alive = np.asarray(g.alive) & ~s
+    moved = False
+    for name in p0:
+        assert p1[name][s].tobytes() == p0[name][s].tobytes(), (
+            f"stable rows of {name} moved during mapping")
+        moved = moved or (p1[name][unstable_alive] != p0[name][unstable_alive]).any()
+    assert moved, "no unstable row moved — mapping did nothing"
+
+    # counters: unstable_gaussians counts alive & ~stable, per view per iter
+    w_len, iters = len(window), cfg.iters_map
+    n_alive = int(jnp.sum(g.alive))
+    n_opt = int(jnp.sum(g.alive & ~stable))
+    w = mr.work
+    assert int(w.gaussians_iters) == iters * w_len * n_alive
+    assert int(w.unstable_gaussians) == iters * w_len * n_opt
+    assert int(w.unstable_gaussians) < int(w.gaussians_iters)
+    assert int(w.skipped_fragments) > 0
+
+
+def test_map_frame_fused_unfused_sparse_counter_parity(scene):
+    cfg_f = _cfg(fused=True, iters_map=6, map_rebuild_stride=3)
+    cfg_u = _cfg(fused=False, iters_map=6, map_rebuild_stride=3)
+    g, masked, window = _map_inputs(scene, cfg_f)
+    stable = g.alive & ((jnp.arange(cfg_f.capacity) % 2) == 0)
+    opt = Adam(lr=cfg_f.lr_map)
+
+    eng_f = StepEngine(scene.intrinsics, cfg_f)
+    eng_u = StepEngine(scene.intrinsics, cfg_u)
+    before = eng_f.stats.dispatches
+    mr_f = eng_f.map_frame(_fresh(g), opt.init(G.params_of(g)), masked,
+                           window, stable=jnp.array(stable))
+    # the sparse fused phase is still ONE dispatch
+    assert eng_f.stats.dispatches - before == 1
+    mr_u = eng_u.map_frame(_fresh(g), opt.init(G.params_of(g)), masked,
+                           window, stable=jnp.array(stable))
+
+    assert mr_f.builds == mr_u.builds
+    assert _work7(mr_f.work) == _work7(mr_u.work)
+    np.testing.assert_allclose(np.asarray(mr_f.losses),
+                               np.asarray(mr_u.losses), rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# session: sparse_opt=False stays the dense bitwise oracle; sparse_opt=True
+# with a never-firing rule replays it bitwise
+# ---------------------------------------------------------------------------
+
+def _replay(scene, cfg, stats=None):
+    sess = S.session_init(scene, cfg, stats=stats)
+    results = []
+    for f in scene.frames[1:]:
+        sess, r = S.session_step(sess, f, stats=stats)
+        results.append(jax.device_get(r))
+    return sess, results
+
+
+def test_session_sparse_never_stable_is_dense_bitwise(scene):
+    prune = PruneConfig(k0=2, step_frac=0.1, stable_age=10**6)
+    _, res_d = _replay(scene, _cfg(fused=True, prune=prune))
+    _, res_s = _replay(scene, _cfg(fused=True, prune=prune, sparse_opt=True))
+    for rd, rs in zip(res_d, res_s):
+        assert np.asarray(rs.pose).tobytes() == np.asarray(rd.pose).tobytes()
+        assert np.asarray(rs.psnr).tobytes() == np.asarray(rd.psnr).tobytes()
+        assert int(rs.alive) == int(rd.alive)
+        assert np.asarray(rs.track_losses).tobytes() == \
+            np.asarray(rd.track_losses).tobytes()
+        assert np.asarray(rs.map_losses).tobytes() == \
+            np.asarray(rd.map_losses).tobytes()
+        np.testing.assert_array_equal(np.asarray(rs.fired), np.asarray(rd.fired))
+        assert _work7(rs.work) == _work7(rd.work)
+
+
+def _sparse_cfg(**kw):
+    # aggressive stability so a short synthetic run actually freezes rows
+    kw.setdefault("fused", True)
+    return _cfg(sparse_opt=True,
+                prune=PruneConfig(k0=2, step_frac=0.1, stable_ema_beta=0.5,
+                                  stable_rel=1.0, stable_age=1), **kw)
+
+
+@pytest.fixture(scope="module")
+def long_scene():
+    return make_dataset("desk0", num_frames=8, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48)
+
+
+def test_session_sparse_freezes_and_reduces_work(long_scene):
+    """The run-level claim: the sparse path optimizes fewer Gaussians and
+    skips fragments, and a Gaussian that is stable at a step's mapping time
+    has bit-identical params before and after the step (tracking only moves
+    the pose; densify only writes dead slots; mark_born exempts newcomers)."""
+    cfg = _sparse_cfg()
+    sess = S.session_init(long_scene, cfg)
+    froze_ever = False
+    for f in long_scene.frames[1:]:
+        p_before = jax.device_get(G.params_of(sess.g))
+        sess, _ = S.session_step(sess, f)
+        stable = np.asarray(sess.pstate.stable)
+        if stable.any():
+            froze_ever = True
+            p_after = jax.device_get(G.params_of(sess.g))
+            for name in p_before:
+                assert p_after[name][stable].tobytes() == \
+                    p_before[name][stable].tobytes(), (
+                    f"frozen rows of {name} moved in a session step")
+    assert froze_ever, "stability never fired — the sparse path was not exercised"
+    fin = S.session_finalize(sess, gt_w2c=[f.w2c_gt for f in long_scene.frames])
+    # frozen Gaussians emitted no fragments and took no Adam updates:
+    # the counters show real dropped work (bench_sparse quantifies vs dense)
+    assert fin.work.unstable_gaussians > 0
+    assert fin.work.skipped_fragments > 0
+    assert fin.work.sched_programs > 0
+
+
+def test_session_sparse_fused_unfused_parity(long_scene):
+    """The unfused session step is the sparse path's per-iteration oracle
+    with a nonempty stable set.  The first keyframe step maps over frozen
+    rows before any fused/unfused float drift accumulates, so its work
+    counters — including the one-time stable-background fragment/program
+    accounting — must match EXACTLY; a missing ``stable_bg`` in the unfused
+    loop shifts its ``fragments`` by the whole background total and fails
+    here.  Later steps drift at the ~1-ulp-reassociation level the dense
+    paths already show on this scene, so they get closeness bounds, not
+    bitwise ones."""
+    runs = {}
+    for fused in (True, False):
+        sess = S.session_init(long_scene, _sparse_cfg(fused=fused))
+        rs = []
+        for f in long_scene.frames[1:]:
+            sess, r = S.session_step(sess, f)
+            rs.append(jax.device_get(r))
+        runs[fused] = rs
+    rs_f, rs_u = runs[True], runs[False]
+    kf_steps = [i for i, r in enumerate(rs_f) if bool(r.is_kf)]
+    assert kf_steps, "no keyframe step — mapping never ran"
+    # first keyframe step: stable set already nonempty (aggressive rule
+    # fires during frame 1's tracking) and exact counter parity holds
+    first = kf_steps[0]
+    assert int(rs_f[first].work.skipped_fragments) > 0, \
+        "stability never fired — the sparse mapping path was not exercised"
+    assert _work7(rs_f[first].work) == _work7(rs_u[first].work)
+    for rf, ru in zip(rs_f, rs_u):
+        assert bool(rf.is_kf) == bool(ru.is_kf)
+        wf, wu = _work7(rf.work), _work7(ru.work)
+        # pixels/iterations are shape-determined: exact on every step
+        assert wf[1] == wu[1] and wf[3] == wu[3]
+        for a, b in zip(wf, wu):
+            assert abs(a - b) <= 0.06 * max(a, b, 1)
+        # frozen rows dropped real work on both paths
+        assert (int(rf.work.unstable_gaussians)
+                < int(rf.work.gaussians_iters))
+        assert (int(ru.work.unstable_gaussians)
+                < int(ru.work.gaussians_iters))
+        np.testing.assert_allclose(np.asarray(rf.pose), np.asarray(ru.pose),
+                                   atol=2e-2)
+    psnr_f = np.asarray([r.psnr for r in rs_f])
+    psnr_u = np.asarray([r.psnr for r in rs_u])
+    np.testing.assert_array_equal(np.isnan(psnr_f), np.isnan(psnr_u))
+    kf = ~np.isnan(psnr_f)
+    np.testing.assert_allclose(psnr_f[kf], psnr_u[kf], atol=0.6)
+
+
+def test_session_sparse_one_dispatch_per_frame(long_scene):
+    stats = EngineStats()
+    sess = S.session_init(long_scene, _sparse_cfg(), stats=stats)
+    boot = stats.dispatches
+    n_steps = 3
+    for t in range(1, n_steps + 1):
+        sess, _ = S.session_step(sess, long_scene.frames[t], stats=stats)
+    assert stats.dispatches - boot == n_steps
+
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        eq = (np.array_equal(x, y, equal_nan=True)
+              if np.issubdtype(x.dtype, np.floating) else np.array_equal(x, y))
+        if not eq:
+            return False
+    return True
+
+
+def test_step_many_sparse_matches_solo(long_scene):
+    cfg = _sparse_cfg()
+    n_steps = 3
+    solo = S.session_init(long_scene, cfg)
+    for t in range(1, n_steps + 1):
+        solo, _ = S.session_step(solo, long_scene.frames[t])
+
+    pool = S.SessionPool([S.session_init(long_scene, cfg),
+                          S.session_init(long_scene, cfg)])
+    for t in range(1, n_steps + 1):
+        pool.step([long_scene.frames[t]] * 2)
+    # 1 dispatch/frame-step holds for the stacked sparse path too
+    assert pool.stats.dispatches == n_steps
+    for slot in range(2):
+        assert _leaves_equal(pool.session(slot), solo)
