@@ -32,15 +32,17 @@ import sys
 _RESULT_TAG = "SERVE_RESULT "
 
 
-def _worker(devices: int, sessions: int, num_frames: int) -> None:
+def _worker(devices: int, sessions: int, num_frames: int,
+            trace_out: str = "") -> None:
     """Runs inside a subprocess with D forced host devices: time one
-    serving epoch of S streams through ShardedPool + SlamServer."""
-    import time
-
+    serving epoch of S streams through ShardedPool + SlamServer, with a
+    SlamScope sink attached (the measured epoch is telemetry-on — the
+    zero-overhead invariant means the numbers are the production numbers)."""
     import jax
 
     from repro.core.keyframes import KeyframePolicy
     from repro.launch.mesh import make_data_mesh
+    from repro.obs import Stopwatch, Telemetry, latency_summary
     from repro.slam.datasets import make_dataset, registered_scenes
     from repro.slam.server import ShardedPool, SlamServer
     from repro.slam.session import SLAMConfig, session_init
@@ -55,27 +57,38 @@ def _worker(devices: int, sessions: int, num_frames: int) -> None:
                         frag_capacity=48, seed=i) for i in range(sessions)]
     steps = num_frames - 1
 
-    def epoch():
+    def epoch(tele=None):
         pool = ShardedPool([session_init(ds, cfg) for ds in dss],
                            mesh=make_data_mesh(devices))
-        srv = SlamServer(pool, queue_depth=2)
-        t0 = time.time()
+        srv = SlamServer(pool, queue_depth=2, telemetry=tele)
+        sw = Stopwatch()
         for t in range(1, num_frames):
             for slot, ds in enumerate(dss):
                 srv.submit(slot, ds.frames[t])
             srv.pump()          # async dispatch; staging overlaps compute
         srv.drain()             # the one sync
-        return pool, srv, time.time() - t0
+        return pool, srv, sw.elapsed()
 
     epoch()                     # warm-up epoch compiles the executables
-    pool, srv, wall = epoch()   # steady state
+    tele = Telemetry.on(trace=bool(trace_out))
+    pool, srv, wall = epoch(tele)   # steady state, telemetry-on
 
     assert pool.stats.dispatches == steps, (pool.stats.dispatches, steps)
     run_syncs = pool.stats.syncs          # the drain (finalize fetches are
                                           # per-retiree, not per-run — keep
                                           # them out of the run metric)
+    reg = tele.registry
+    # Registry-side dispatch split must agree with the pool's own counters.
+    assert reg.sum_counters("dispatches", kind="step") == steps
     fins = [pool.finalize(i, gt_w2c=[f.w2c_gt for f in dss[i].frames])
             for i in range(sessions)]
+    for i, fin in enumerate(fins):        # already-fetched work → registry
+        tele.work(f"s{i}", fin.work)
+    work_per_stream = {
+        f"s{i}": {f: reg.sum_counters(f"work/{f}", stream=f"s{i}")
+                  for f in ("fragments", "pixels", "unstable_gaussians")}
+        for i in range(sessions)}
+    tele.export_trace(trace_out)
     print(_RESULT_TAG + json.dumps({
         "devices": devices,
         "sessions": sessions,
@@ -87,12 +100,19 @@ def _worker(devices: int, sessions: int, num_frames: int) -> None:
         "syncs_per_run": run_syncs,
         "queue_wait_ms_per_frame": round(srv.stats.queue_wait_ms_per_frame, 3),
         "stage_s": round(srv.stats.stage_s, 3),
+        # SlamScope registry summaries (merged across the S streams):
+        "frame_latency_ms": latency_summary(reg, "frame_latency_ms"),
+        "queue_wait_ms": latency_summary(reg, "queue_wait_ms"),
+        "queue_depth_hwm": reg.max_gauge_hwm("queue_depth"),
+        "admin_dispatches": reg.sum_counters("dispatches", kind="admin"),
+        "work_per_stream": work_per_stream,
         "ate_cm": [round(f.ate * 100, 2) for f in fins],
         "psnr_db": [round(f.mean_psnr, 2) for f in fins],
     }))
 
 
-def _spawn(devices: int, sessions: int, num_frames: int) -> dict:
+def _spawn(devices: int, sessions: int, num_frames: int,
+           trace_out: str = "") -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     src = os.path.join(os.path.dirname(__file__), "..", "src")
@@ -101,7 +121,8 @@ def _spawn(devices: int, sessions: int, num_frames: int) -> dict:
     out = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_serve", "--worker",
          "--devices", str(devices), "--sessions", str(sessions),
-         "--frames", str(num_frames)],
+         "--frames", str(num_frames)]
+        + (["--trace-out", trace_out] if trace_out else []),
         capture_output=True, text=True, env=env, timeout=1800,
         cwd=os.path.join(os.path.dirname(__file__), ".."),
     )
@@ -116,7 +137,8 @@ def _spawn(devices: int, sessions: int, num_frames: int) -> dict:
                        f"\n{out.stdout}")
 
 
-def run(quick: bool = True, out: str = "BENCH_slam.json"):
+def run(quick: bool = True, out: str = "BENCH_slam.json",
+        trace: bool = True):
     from benchmarks.common import emit, stamp
 
     device_counts = (1, 2) if quick else (1, 2, 4)
@@ -125,13 +147,17 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
 
     rows = {}
     for d in device_counts:
-        r = _spawn(d, sessions, num_frames)
+        trace_out = f"bench_serve_trace_D{d}.json" if trace else ""
+        r = _spawn(d, sessions, num_frames, trace_out=trace_out)
+        if trace_out:
+            r["trace"] = trace_out
         rows[f"D{d}"] = r
+        lat = r["frame_latency_ms"]
         emit(f"serve/D{d}",
              1e6 / max(r["frames_per_s"], 1e-9),
              f"disp_per_step={r['dispatches_per_frame_step']};"
-             f"syncs_per_step={r['syncs_per_frame_step']};"
-             f"queue_wait_ms={r['queue_wait_ms_per_frame']}")
+             f"p50_ms={lat['p50_ms']};p99_ms={lat['p99_ms']};"
+             f"qdepth_hwm={r['queue_depth_hwm']}")
 
     # The serving invariant: dispatches/frame-step == 1.0 for every device
     # count (each worker also asserts it in-process).
@@ -143,6 +169,9 @@ def run(quick: bool = True, out: str = "BENCH_slam.json"):
         "scene_hw": [48, 64],
         "sessions": sessions,
         "dispatches_per_frame_step": 1.0,
+        # Headline latency row (single-device serving, pool-merged):
+        "frame_latency_ms": rows["D1"]["frame_latency_ms"],
+        "queue_depth_hwm": max(r["queue_depth_hwm"] for r in rows.values()),
         "rows": rows,
     }
 
@@ -167,6 +196,12 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=1)
     ap.add_argument("--sessions", type=int, default=4)
     ap.add_argument("--frames", type=int, default=4)
+    ap.add_argument("--trace-out", default="",
+                    help="write the worker's Perfetto-loadable Chrome trace "
+                         "JSON here (parent passes bench_serve_trace_D{d}"
+                         ".json per device count)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip Perfetto trace export")
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--full", action="store_true")
     mode.add_argument("--quick", action="store_true",
@@ -174,6 +209,7 @@ if __name__ == "__main__":
                            "smoke jobs)")
     args = ap.parse_args()
     if args.worker:
-        _worker(args.devices, args.sessions, args.frames)
+        _worker(args.devices, args.sessions, args.frames,
+                trace_out=args.trace_out)
     else:
-        run(quick=not args.full, out=args.out)
+        run(quick=not args.full, out=args.out, trace=not args.no_trace)

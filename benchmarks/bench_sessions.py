@@ -24,12 +24,12 @@ if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
 
 import json
 import os
-import time
 
 import jax
 
 from benchmarks.common import emit, stamp
 from repro.core.keyframes import KeyframePolicy
+from repro.obs import Stopwatch, Telemetry, latency_summary
 from repro.slam.datasets import make_dataset, registered_scenes
 from repro.slam.engine import EngineStats
 from repro.slam.session import (
@@ -71,13 +71,18 @@ def _measure(s: int, num_frames: int):
     for slot, ds in enumerate(dss):
         pool.swap(slot, session_init(ds, cfg))
     pool.stats = EngineStats()
-    t0 = time.time()
+    tele = Telemetry.on(trace=False)
+    run_sw = Stopwatch()
     for t in range(1, num_frames):
+        sw = Stopwatch()
         pool.step([ds.frames[t] for ds in dss])
+        # host-side enqueue latency per stacked frame-step (the dispatch is
+        # async — device time shows up only at the block below)
+        tele.latency("step_host_ms", sw.elapsed() * 1e3)
     # dispatches are async: block on the final state so the wall clock
     # covers the compute, not just the enqueues
     jax.block_until_ready(jax.tree.leaves(pool.stacked))
-    wall = time.time() - t0
+    wall = run_sw.elapsed()
     fins = [pool.finalize(i, gt_w2c=[f.w2c_gt for f in dss[i].frames])
             for i in range(s)]
     stacked = {
@@ -89,6 +94,7 @@ def _measure(s: int, num_frames: int):
         "dispatches_per_stream_frame": round(
             pool.stats.dispatches / (s * steps), 3),
         "syncs_per_frame_step": round(pool.stats.syncs / steps, 3),
+        "step_host_ms": latency_summary(tele.registry, "step_host_ms"),
         "ate_cm": [round(f.ate * 100, 2) for f in fins],
         "psnr_db": [round(f.mean_psnr, 2) for f in fins],
     }
@@ -103,13 +109,13 @@ def _measure(s: int, num_frames: int):
             warm[i], _ = session_step(warm[i], ds.frames[t])
     solos = [session_init(ds, cfg) for ds in dss]
     solo_stats = EngineStats()
-    t0 = time.time()
+    solo_sw = Stopwatch()
     for t in range(1, num_frames):
         for i, ds in enumerate(dss):
             solos[i], _ = session_step(solos[i], ds.frames[t],
                                        stats=solo_stats)
     jax.block_until_ready([jax.tree.leaves(sess) for sess in solos])
-    wall = time.time() - t0
+    wall = solo_sw.elapsed()
     solo = {
         "wall_s": round(wall, 3),
         "frames_per_s": round(s * steps / max(wall, 1e-9), 3),

@@ -16,11 +16,11 @@ if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
     import _bootstrap  # noqa: F401
 
 import json
-import time
 
 from benchmarks.common import emit, stamp
 from repro.core.keyframes import KeyframePolicy
 from repro.core.pruning import PruneConfig
+from repro.obs import Stopwatch, Telemetry, latency_summary
 from repro.slam.datasets import make_dataset
 from repro.slam.session import SLAMConfig, run_sequence
 
@@ -33,11 +33,14 @@ def _measure(ds, fused: bool, prune: bool):
         fused=fused,
     )
     # Warm-up run compiles every bundle; the timed run measures the steady
-    # state the dispatch/sync counts describe.
+    # state the dispatch/sync counts describe.  The timed run carries a
+    # SlamScope sink (zero-overhead: same dispatches, bitwise-same outputs)
+    # so the row gets a per-frame host-latency histogram, not just a mean.
     run_sequence(ds, cfg)
-    t0 = time.time()
-    res = run_sequence(ds, cfg)
-    wall = time.time() - t0
+    tele = Telemetry.on(trace=False)
+    sw = Stopwatch()
+    res = run_sequence(ds, cfg, telemetry=tele)
+    wall = sw.elapsed()
     frames = res.work.frames
     return {
         "frames": frames,
@@ -45,6 +48,7 @@ def _measure(ds, fused: bool, prune: bool):
         "fps": round(frames / max(wall, 1e-9), 3),
         "dispatches_per_frame": round(res.dispatches / frames, 2),
         "syncs_per_frame": round(res.syncs / frames, 2),
+        "frame_latency_ms": latency_summary(tele.registry),
         "ate_cm": round(res.ate * 100, 3),
         "psnr_db": round(res.mean_psnr, 3),
         "fragments": res.work.fragments,

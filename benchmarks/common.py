@@ -5,9 +5,10 @@ from __future__ import annotations
 
 import os
 import subprocess
-import time
 
 import jax
+
+from repro.obs import Stopwatch
 
 ROWS = []
 
@@ -43,13 +44,15 @@ def emit(name: str, us_per_call: float, derived: str = ""):
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time per call in microseconds (CPU proxy timings)."""
+    """Median wall time per call in microseconds (CPU proxy timings), on
+    SlamScope's wall clock (:class:`repro.obs.Stopwatch`) so bench timings
+    and serve-tier latency histograms share one time definition."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
+        ts.append(sw.elapsed())
     ts.sort()
     return ts[len(ts) // 2] * 1e6

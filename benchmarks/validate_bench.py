@@ -1,0 +1,119 @@
+"""Schema validation for ``BENCH_slam.json`` — the CI gate that keeps the
+perf report honest.
+
+Checks three things and exits 1 (with a findings list) on any failure:
+
+1. **Provenance** — the top-level report and every amended row (``wsu``,
+   ``sparse``, ``sessions``, ``serve``) carry the PR-6 ``stamp()``
+   ``meta.commit`` field, so no number in the report is of unknown origin.
+2. **Serve latency schema** — the SlamScope fields this PR added to the
+   ``serve`` row: a ``frame_latency_ms`` summary with ``p50_ms <= p99_ms``
+   on the row and on every per-device sub-row, and ``queue_depth_hwm >= 1``
+   (frames actually flowed through the queue).
+3. **The serving invariant** — ``dispatches_per_frame_step == 1.0`` on the
+   serve row and every sub-row.
+
+Run:  PYTHONPATH=src python -m benchmarks.validate_bench [BENCH_slam.json]
+"""
+
+from __future__ import annotations
+
+if __package__ in (None, ""):  # direct run: repair sys.path (see _bootstrap)
+    import _bootstrap  # noqa: F401
+
+import json
+import sys
+
+#: Rows amended into the report by their own bench modules; each must be
+#: individually stamped (the top-level stamp covers only bench_slam_fps).
+AMENDED_ROWS = ("wsu", "sparse", "sessions", "serve")
+
+
+def _check_latency_summary(lat, where: str, errs: list) -> None:
+    if not isinstance(lat, dict) or lat.get("count", 0) == 0:
+        errs.append(f"{where}: empty or missing latency summary")
+        return
+    for field in ("p50_ms", "p90_ms", "p99_ms", "mean_ms", "max_ms"):
+        v = lat.get(field)
+        if not isinstance(v, (int, float)) or v < 0:
+            errs.append(f"{where}.{field}: missing or negative ({v!r})")
+    if all(isinstance(lat.get(f), (int, float))
+           for f in ("p50_ms", "p99_ms", "max_ms")):
+        if not lat["p50_ms"] <= lat["p99_ms"] <= lat["max_ms"] + 1e-9:
+            errs.append(f"{where}: quantiles not monotone "
+                        f"(p50={lat['p50_ms']}, p99={lat['p99_ms']}, "
+                        f"max={lat['max_ms']})")
+
+
+def _check_stamp(row, where: str, errs: list) -> None:
+    meta = row.get("meta") if isinstance(row, dict) else None
+    if not isinstance(meta, dict) or not meta.get("commit"):
+        errs.append(f"{where}: missing stamp() provenance (meta.commit)")
+
+
+def validate(report: dict) -> list:
+    """Return the list of schema violations (empty == valid)."""
+    errs: list = []
+
+    _check_stamp(report, "top-level (bench_slam_fps)", errs)
+    for key in AMENDED_ROWS:
+        if key not in report:
+            errs.append(
+                f"missing row: {key!r} (run `python -m benchmarks.run "
+                f"--only slam_fps,wsu,sparse,sessions,serve`)")
+            continue
+        _check_stamp(report[key], key, errs)
+
+    # slam_fps rows: per-frame latency histograms on the measured engines.
+    for key in ("engine_fused", "engine_fused_rtgs", "loop_per_iteration"):
+        if key in report:
+            _check_latency_summary(report[key].get("frame_latency_ms"),
+                                   f"{key}.frame_latency_ms", errs)
+
+    serve = report.get("serve")
+    if isinstance(serve, dict):
+        _check_latency_summary(serve.get("frame_latency_ms"),
+                               "serve.frame_latency_ms", errs)
+        hwm = serve.get("queue_depth_hwm")
+        if not isinstance(hwm, int) or hwm < 1:
+            errs.append(f"serve.queue_depth_hwm: expected int >= 1, "
+                        f"got {hwm!r}")
+        if serve.get("dispatches_per_frame_step") != 1.0:
+            errs.append("serve.dispatches_per_frame_step != 1.0 "
+                        f"({serve.get('dispatches_per_frame_step')!r})")
+        for dkey, row in (serve.get("rows") or {}).items():
+            if row.get("dispatches_per_frame_step") != 1.0:
+                errs.append(f"serve.rows.{dkey}.dispatches_per_frame_step "
+                            f"!= 1.0 ({row.get('dispatches_per_frame_step')!r})")
+            _check_latency_summary(row.get("frame_latency_ms"),
+                                   f"serve.rows.{dkey}.frame_latency_ms",
+                                   errs)
+            if not isinstance(row.get("queue_depth_hwm"), int) \
+                    or row["queue_depth_hwm"] < 1:
+                errs.append(f"serve.rows.{dkey}.queue_depth_hwm: expected "
+                            f"int >= 1, got {row.get('queue_depth_hwm')!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    path = (argv or sys.argv[1:] or ["BENCH_slam.json"])[0]
+    try:
+        with open(path) as fh:
+            report = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"validate_bench: cannot read {path}: {e}")
+        return 1
+    errs = validate(report)
+    if errs:
+        print(f"validate_bench: {path} FAILED {len(errs)} check(s):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    print(f"validate_bench: {path} OK "
+          f"({1 + len(AMENDED_ROWS)} stamped rows, serve latency schema, "
+          f"1.0 dispatches/frame-step)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,14 +13,14 @@ its slot — per-row outputs stay bitwise-equal to solo runs throughout
 (tests/test_serve.py proves it).
 
 Run:  PYTHONPATH=src python examples/serve_slam.py [--frames 8]
-          [--sessions 4] [--devices N] [--no-swap]
+          [--sessions 4] [--devices N] [--no-swap] [--trace out.json]
 """
 
 import argparse
-import time
 
 from repro.core.keyframes import KeyframePolicy
 from repro.launch.mesh import make_data_mesh
+from repro.obs import Stopwatch, Telemetry, latency_summary
 from repro.slam.datasets import make_dataset, registered_scenes
 from repro.slam.server import ShardedPool, SlamServer
 from repro.slam.session import SLAMConfig, session_finalize, session_init
@@ -35,8 +35,12 @@ def main():
                          "devices; sessions must divide evenly)")
     ap.add_argument("--no-swap", action="store_true",
                     help="skip the mid-run retire/admit demonstration")
+    ap.add_argument("--trace", default="", metavar="out.json",
+                    help="export a SlamScope Chrome-trace JSON of the run "
+                         "(open in Perfetto: ui.perfetto.dev)")
     args = ap.parse_args()
     s = args.sessions
+    tele = Telemetry.on(trace=bool(args.trace))
 
     cfg = SLAMConfig(
         iters_track=4, iters_map=6, capacity=2048, frag_capacity=64,
@@ -53,7 +57,7 @@ def main():
 
     mesh = make_data_mesh(args.devices)
     pool = ShardedPool([session_init(ds, cfg) for ds in streams], mesh=mesh)
-    srv = SlamServer(pool, queue_depth=2)
+    srv = SlamServer(pool, queue_depth=2, telemetry=tele)
     print(f"pool: {pool.size} session rows sharded over "
           f"{pool.num_devices} device(s) on the 'data' axis")
 
@@ -62,7 +66,7 @@ def main():
     cursor = {slot: 1 for slot in live}         # next frame per stream
     retired = []
 
-    t0 = time.time()
+    sw = Stopwatch()
     for t in range(1, args.frames):
         if t == swap_at:
             # Admission control: stream 0 hands its slot to the spare.
@@ -79,7 +83,7 @@ def main():
                 cursor[slot] += 1
         srv.pump()              # async: staging overlaps device compute
     srv.drain()                 # the one sync
-    wall = time.time() - t0
+    wall = sw.elapsed()
 
     steps = srv.stats.steps
     print(f"\nserved {s} slots x {steps} frame-steps in {wall:.1f}s "
@@ -92,6 +96,14 @@ def main():
           f"{srv.stats.queue_wait_ms_per_frame:.2f} ms/frame; host staging "
           f"{srv.stats.stage_s:.2f}s total; "
           f"{srv.stats.backpressure_events} backpressure event(s)")
+    lat = latency_summary(tele.registry)
+    if lat.get("count"):
+        print(f"frame latency (submit→dispatch-return, pool-merged): "
+              f"p50 {lat['p50_ms']:.2f} ms | p90 {lat['p90_ms']:.2f} ms | "
+              f"p99 {lat['p99_ms']:.2f} ms | queue-depth hwm "
+              f"{tele.registry.max_gauge_hwm('queue_depth')}")
+    if tele.export_trace(args.trace):
+        print(f"trace: wrote {args.trace} (load at ui.perfetto.dev)")
 
     print(f"\n{'slot':>4} {'scene':>8} {'ATE cm':>8} {'PSNR dB':>8} "
           f"{'keyframes':>9}")

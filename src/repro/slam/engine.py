@@ -99,6 +99,16 @@ class EngineStats:
     dispatches: int = 0   # jitted-callable invocations issued
     syncs: int = 0        # device->host fetches issued
 
+    def record(self, telemetry, **labels) -> None:
+        """Export the running totals into a SlamScope registry (host ints
+        only — no fetch, no dispatch).  ``telemetry`` may be ``None`` or a
+        disabled sink; the frame-step/admin split lives at the server layer,
+        so engine dispatches count as ``kind="step"``."""
+        if telemetry is None or not getattr(telemetry, "enabled", False):
+            return
+        telemetry.count("dispatches", self.dispatches, kind="step", **labels)
+        telemetry.count("syncs", self.syncs, **labels)
+
 
 @dataclasses.dataclass
 class TrackResult:

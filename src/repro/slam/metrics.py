@@ -10,12 +10,14 @@ Two counter forms:
   ``lax.scan`` carries so per-iteration accounting happens **on device**;
   the engine fetches it once per frame (not per iteration) and absorbs it
   into the host ``WorkCounters``, which bounds the int32 range per frame.
-  The session layer instead accumulates a *run-cumulative* ``DeviceWork``
-  on device (fetched once at finalize): that trades the per-frame bound
-  for ~2^31 total — ample for the synthetic scenes here, but a
-  paper-resolution stream (~15M fragments per keyframe) would wrap the
-  fragment counter after a few hundred keyframes; fetch + absorb
-  per-frame (``StepResult.work``) for long high-resolution runs.
+  The session layer accumulates a *run-cumulative* :class:`WideWork` on
+  device (fetched once at finalize): a hi/lo carry-split pair of int32
+  ``DeviceWork`` words (``total = hi * 2**30 + lo``) that widens the
+  run-cumulative range to ~2^61 per counter while staying inside int32
+  arithmetic — a paper-resolution stream (~15M fragments per keyframe)
+  fits for ~10^13 keyframes, so long high-resolution runs no longer need
+  per-frame fetches to avoid wrap (``StepResult.work`` remains the
+  per-frame int32 snapshot; the per-frame bound is unchanged).
 """
 
 from __future__ import annotations
@@ -75,12 +77,56 @@ def device_work_add(w: DeviceWork, fragments, pixels, alive,
 
 
 def device_work_merge(a: DeviceWork, b: DeviceWork) -> DeviceWork:
-    """Elementwise sum of two accumulators (jit/scan-safe).  The session
-    layer uses this both for a frame's track+map snapshot and for the
-    session's cumulative device-resident counters (int32 — fine up to
-    ~2e9 fragments, i.e. tens of thousands of frames at bench scales)."""
+    """Elementwise sum of two *per-frame* accumulators (jit/scan-safe).
+    Run-cumulative totals must use :class:`WideWork` instead — a plain
+    int32 sum wraps after ~2e9 fragments."""
     return DeviceWork(*(jnp.asarray(x, jnp.int32) + jnp.asarray(y, jnp.int32)
                         for x, y in zip(a, b)))
+
+
+# ---------------------------------------------------------------------------
+# run-cumulative work, widened past int32 (hi/lo carry split)
+# ---------------------------------------------------------------------------
+
+_WIDE_SHIFT = 30
+_WIDE_BASE = 1 << _WIDE_SHIFT          # lo word lives in [0, 2**30)
+
+
+class WideWork(NamedTuple):
+    """Run-cumulative work counters widened past int32 without needing
+    x64: two int32 ``DeviceWork`` words per counter, ``total = hi *
+    2**30 + lo`` with ``lo`` kept in ``[0, 2**30)`` by a per-add carry.
+    Range ~2^61 per counter — the session layer's device-resident
+    accumulator (fetched once at finalize), immune to the wrap a flat
+    int32 run-cumulative ``DeviceWork`` hits after ~2e9 fragments."""
+
+    hi: DeviceWork    # units of 2**30
+    lo: DeviceWork    # remainder in [0, 2**30)
+
+
+def wide_work_zero() -> WideWork:
+    return WideWork(hi=device_work_zero(), lo=device_work_zero())
+
+
+def wide_work_add(acc: WideWork, w: DeviceWork) -> WideWork:
+    """``acc + w`` (jit/scan-safe).  ``w`` is a non-negative per-frame
+    int32 snapshot; it is carry-split before the add, so no intermediate
+    exceeds ``2**31`` for ANY representable ``w`` — large per-frame counts
+    cannot wrap the accumulator."""
+    his, los = [], []
+    for h, l, x in zip(acc.hi, acc.lo, w):
+        x = jnp.asarray(x, jnp.int32)
+        lo2 = l + (x & (_WIDE_BASE - 1))        # both < 2**30: no wrap
+        his.append(h + (x >> _WIDE_SHIFT) + (lo2 >> _WIDE_SHIFT))
+        los.append(lo2 & (_WIDE_BASE - 1))
+    return WideWork(hi=DeviceWork(*his), lo=DeviceWork(*los))
+
+
+def wide_work_totals(acc: WideWork) -> dict:
+    """Host-side exact totals (Python ints) of a fetched :class:`WideWork`:
+    ``{field: hi * 2**30 + lo}``."""
+    return {f: int(h) * _WIDE_BASE + int(l)
+            for f, h, l in zip(DeviceWork._fields, acc.hi, acc.lo)}
 
 
 class ImbalanceStats(NamedTuple):

@@ -45,7 +45,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -55,6 +54,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import to_shardings
 from repro.launch.mesh import axis_size, make_data_mesh
+from repro.obs import Stopwatch, Telemetry, now_s, telemetry_or_off
 from repro.slam.engine import EngineStats, _donate_kwargs
 from repro.slam.session import (
     Observation,
@@ -221,28 +221,44 @@ class FrameQueue:
     """Bounded per-slot frame staging queues (host memory only).
 
     ``put`` returns ``False`` when a slot's queue is at depth — the
-    caller's backpressure signal.  Enqueue timestamps ride along so the
-    dispatcher can account queue wait (time a frame sat queued before its
-    lockstep batch dispatched)."""
+    caller's backpressure signal.  Enqueue timestamps (``obs.now_s``, the
+    codebase's one wall clock) and a flow id ride along so the dispatcher
+    can account queue wait per frame AND draw the enqueue→dispatch flow
+    arrow in the trace.  The telemetry sink sees every depth change
+    (``queue_depth`` gauge per slot — its ``hwm`` is the queue-depth
+    high-water mark BENCH reports)."""
 
-    def __init__(self, slots: int, depth: int = 2):
+    def __init__(self, slots: int, depth: int = 2,
+                 telemetry: Optional[Telemetry] = None):
         if depth < 1:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         self.depth = depth
+        self.tele = telemetry_or_off(telemetry)
         self._q: List[collections.deque] = [
             collections.deque() for _ in range(slots)]
+        self._next_flow = 0
+
+    def _depth_changed(self, slot: int) -> None:
+        n = len(self._q[slot])
+        self.tele.gauge("queue_depth", n, slot=slot)
+        self.tele.trace.counter(f"queue_depth/slot{slot}", depth=n)
 
     def put(self, slot: int, frame) -> bool:
         q = self._q[slot]
         if len(q) >= self.depth:
             return False
-        q.append((frame, time.monotonic()))
+        fid = self._next_flow
+        self._next_flow += 1
+        q.append((frame, now_s(), fid))
+        self.tele.flow_start(fid, "frame")
+        self._depth_changed(slot)
         return True
 
     def pop(self, slot: int):
-        """Oldest queued ``(frame, waited_s)`` for ``slot``."""
-        frame, t0 = self._q[slot].popleft()
-        return frame, time.monotonic() - t0
+        """Oldest queued ``(frame, waited_s, flow_id)`` for ``slot``."""
+        frame, t0, fid = self._q[slot].popleft()
+        self._depth_changed(slot)
+        return frame, now_s() - t0, fid
 
     def fill(self, slot: int) -> int:
         return len(self._q[slot])
@@ -250,6 +266,8 @@ class FrameQueue:
     def clear(self, slot: int) -> int:
         n = len(self._q[slot])
         self._q[slot].clear()
+        if n:
+            self._depth_changed(slot)
         return n
 
     def ready(self, slots) -> bool:
@@ -293,12 +311,24 @@ class SlamServer:
     shape; the row's leftover state is scratch), admit overwrites a free
     slot's every leaf with a fresh session.  A full pool raises
     :class:`PoolFull`.
+
+    ``telemetry`` (SlamScope) instruments the pump as spans (``stage``,
+    ``dispatch``, ``drain``, ``admit``, ``retire``) with an
+    enqueue→dispatch flow arrow per frame, and feeds the registry
+    per-stream ``frame_latency_ms``/``queue_wait_ms`` histograms, the
+    ``queue_depth`` gauges, and ``dispatches`` counters split by
+    ``kind="step"`` vs ``kind="admin"``.  Everything rides host-side
+    values the server already holds — telemetry on/off runs are
+    bitwise-identical with exactly the same dispatch count
+    (tests/test_obs.py).
     """
 
     def __init__(self, pool: ShardedPool, queue_depth: int = 2,
-                 live: Optional[Sequence[int]] = None):
+                 live: Optional[Sequence[int]] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.pool = pool
-        self.queue = FrameQueue(pool.size, queue_depth)
+        self.tele = telemetry_or_off(telemetry)
+        self.queue = FrameQueue(pool.size, queue_depth, telemetry=self.tele)
         self.stats = ServeStats()
         self._live = [False] * pool.size
         for s in (range(pool.size) if live is None else live):
@@ -326,37 +356,61 @@ class SlamServer:
         if not self._live[slot]:
             raise ValueError(f"slot {slot} is not live; admit a session "
                              "first")
-        if not self.queue.put(slot, frame):
-            self.stats.backpressure_events += 1
-            self.pump()
+        with self.tele.span("submit", slot=slot):
             if not self.queue.put(slot, frame):
-                raise QueueFull(
-                    f"slot {slot}'s queue is at depth {self.queue.depth} "
-                    "and no lockstep batch can dispatch (a peer stream is "
-                    "starved); submit frames for the other live slots")
-        self.stats.frames_in += 1
+                self.stats.backpressure_events += 1
+                self.tele.count("backpressure", stream=slot)
+                self.pump()
+                if not self.queue.put(slot, frame):
+                    raise QueueFull(
+                        f"slot {slot}'s queue is at depth "
+                        f"{self.queue.depth} and no lockstep batch can "
+                        "dispatch (a peer stream is starved); submit "
+                        "frames for the other live slots")
+            self.stats.frames_in += 1
 
     # -- dispatch ----------------------------------------------------------
 
     def pump(self) -> int:
         """Dispatch as many lockstep frame-steps as the queues allow,
         asynchronously (never blocks on device compute).  Returns the
-        number of steps dispatched."""
+        number of steps dispatched.
+
+        Telemetry per step: a ``stage`` span (frame pops + sharded
+        ``device_put``) and a ``dispatch`` span (the async jitted call)
+        with each popped frame's flow arrow ending inside it; per-frame
+        ``queue_wait_ms`` and ``frame_latency_ms`` (enqueue→dispatch-return
+        — the host-observable latency of an async pipeline; device-time is
+        only knowable at :meth:`drain`) land in per-stream histograms."""
         live = self.live_slots()
         steps = 0
         while live and self.queue.ready(live):
-            t0 = time.monotonic()
-            rows = []
-            for s in range(self.pool.size):
-                if self._live[s]:
-                    frame, waited = self.queue.pop(s)
-                    self.stats.queue_wait_s += waited
-                    rows.append(frame)
-                else:
-                    rows.append(self._blank)
-            obs = self.pool.stage(rows)
-            self.stats.stage_s += time.monotonic() - t0
-            self.last_result = self.pool.step(obs)
+            step_no = self.stats.steps
+            sw = Stopwatch()
+            rows, popped = [], []
+            with self.tele.span("stage", step=step_no):
+                for s in range(self.pool.size):
+                    if self._live[s]:
+                        frame, waited, fid = self.queue.pop(s)
+                        self.stats.queue_wait_s += waited
+                        self.tele.latency("queue_wait_ms", waited * 1e3,
+                                          stream=s)
+                        popped.append((s, now_s() - waited, fid))
+                        rows.append(frame)
+                    else:
+                        rows.append(self._blank)
+                obs = self.pool.stage(rows)
+            self.stats.stage_s += sw.elapsed()
+            with self.tele.span("dispatch", step=step_no):
+                for _, _, fid in popped:
+                    self.tele.flow_end(fid, "frame")
+                self.last_result = self.pool.step(obs)
+            self.tele.count("dispatches", kind="step")
+            t1 = now_s()
+            for s, t_enq, _ in popped:
+                self.tele.latency("frame_latency_ms", (t1 - t_enq) * 1e3,
+                                  stream=s)
+            self.tele.latency("step_host_ms", sw.elapsed() * 1e3)
             self.stats.steps += 1
             steps += 1
         return steps
@@ -366,8 +420,10 @@ class SlamServer:
         in-flight dispatch finishes — the ONE device sync of a serving
         run."""
         self.pump()
-        jax.block_until_ready(jax.tree.leaves(self.pool.stacked))
+        with self.tele.span("drain"):
+            jax.block_until_ready(jax.tree.leaves(self.pool.stacked))
         self.pool.stats.syncs += 1
+        self.tele.count("syncs")
 
     # -- admission control -------------------------------------------------
 
@@ -381,7 +437,9 @@ class SlamServer:
                 f"all {self.pool.size} slots are live; retire a session "
                 "first (admission backpressure)")
         slot = free[0]
-        self.pool.swap(slot, session)
+        with self.tele.span("admit", slot=slot):
+            self.pool.swap(slot, session)
+        self.tele.count("dispatches", kind="admin")
         self.queue.clear(slot)
         self._live[slot] = True
         self.stats.admits += 1
@@ -396,7 +454,9 @@ class SlamServer:
         self.stats.frames_dropped += self.queue.clear(slot)
         self._live[slot] = False
         self.stats.retires += 1
-        return self.pool.session(slot)
+        with self.tele.span("retire", slot=slot):
+            row = self.pool.session(slot)
+        return row
 
     def finalize(self, slot: int, gt_w2c=None, **kw) -> SLAMResult:
         """Drain and assemble ``slot``'s :class:`SLAMResult` (syncs)."""

@@ -37,7 +37,6 @@ these entry points; :func:`run_sequence` is the non-deprecated equivalent.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -75,7 +74,11 @@ from repro.slam.metrics import (
     ate_rmse,
     device_work_merge,
     device_work_zero,
+    wide_work_add,
+    wide_work_totals,
+    wide_work_zero,
 )
+from repro.obs import Stopwatch, telemetry_or_off
 from repro.train.optimizer import Adam, AdamState
 
 
@@ -245,10 +248,11 @@ class SlamSession:
     prev_depth: jnp.ndarray            # (H, Wd)     geometric tracking)
     kf_psnr: jnp.ndarray               # (F,) f32 per-keyframe PSNR log (NaN pad)
     alive_log: jnp.ndarray             # (F,) i32 alive Gaussians per frame
-    work: DeviceWork                   # cumulative on-device work counters
-                                       # (int32 — see metrics.py range note;
+    work: "metrics.WideWork"           # cumulative on-device work counters
+                                       # (hi/lo int32 carry split, ~2^61
+                                       # range — see metrics.WideWork;
                                        # StepResult.work is the per-frame
-                                       # snapshot for long runs)
+                                       # int32 snapshot)
     frags: FragmentLists               # cached stage-1 lists @ last keyframe
     sched: Optional[object]            # carried TileSchedule (WSU backend)
     rng: jnp.ndarray                   # densify PRNG key
@@ -574,7 +578,7 @@ def _make_row_step(meta: SessionMeta, factor: int):
             prev_rgb=rgb, prev_depth=depth,
             kf_psnr=kf_psnr_buf,
             alive_log=sess.alive_log.at[idx].set(alive_now),
-            work=device_work_merge(sess.work, step_work),
+            work=wide_work_add(sess.work, step_work),
             frags=frags_l, sched=sched_l,
         )
         result = StepResult(pose=new_pose, is_kf=is_kf, psnr=psnr_v,
@@ -699,6 +703,7 @@ def _boot_fn(meta: SessionMeta):
             g, opt, work_m, _, image = st_1._map_scan_masked(
                 g, masked, map_opt0, kf_w2c, kf_rgb, kf_depth, kf_valid,
                 device_work_zero())
+            work_m = wide_work_add(wide_work_zero(), work_m)
             psnr0 = psnr_dev(image, kf_rgb[0])
             frags_l = st_1._build_core(g, masked, kf_w2c[0])
             sched_l = (build_schedule(frags_l.count, st_1.plan.chunk,
@@ -805,13 +810,7 @@ def session_finalize(session: SlamSession, gt_w2c=None, *,
     # A partially-run session (e.g. a pool retiree) aligns against the
     # ground truth of the frames it actually processed.
     ate = ate_rmse(est, gt[:n]) if len(gt) >= n and n >= 2 else float("nan")
-    counters = WorkCounters(
-        fragments=int(work.fragments), pixels=int(work.pixels),
-        gaussians_iters=int(work.gaussians_iters),
-        iterations=int(work.iterations), frames=n,
-        unstable_gaussians=int(work.unstable_gaussians),
-        sched_programs=int(work.sched_programs),
-        skipped_fragments=int(work.skipped_fragments))
+    counters = WorkCounters(frames=n, **wide_work_totals(work))
     return SLAMResult(
         est_w2c=est,
         gt_w2c=gt,
@@ -827,14 +826,24 @@ def session_finalize(session: SlamSession, gt_w2c=None, *,
 
 
 def run_sequence(dataset: SLAMDataset, cfg: SLAMConfig,
-                 verbose: bool = False) -> SLAMResult:
+                 verbose: bool = False, telemetry=None) -> SLAMResult:
     """Run a whole dataset through the session API (the non-deprecated
     successor of ``run_slam``): init, one :func:`session_step` per frame,
     finalize.  Per-frame host syncs happen only when the host actually
-    needs a device value (downsampling's factor schedule, verbose prints)."""
-    t0 = time.time()
+    needs a device value (downsampling's factor schedule, verbose prints).
+
+    ``telemetry`` (a :class:`repro.obs.Telemetry`) records per-frame spans
+    and a ``frame_latency_ms`` histogram (host step wall — the dispatch is
+    async) labeled ``stream=dataset.name``, and folds the finalized work
+    counters into the registry.  It rides values this loop already holds —
+    no extra fetch, no extra dispatch; a telemetry-on run is
+    bitwise-identical to a telemetry-off run (tests/test_obs.py)."""
+    tele = telemetry_or_off(telemetry)
+    run_sw = Stopwatch()
     stats = EngineStats()
-    sess = session_init(dataset, cfg, stats=stats)
+    stream = dataset.name
+    with tele.span("init", stream=stream):
+        sess = session_init(dataset, cfg, stats=stats)
     last_kf_idx = 0                      # host mirror for the §4.2 schedule
     need_iskf = cfg.downsample.enabled
     kp = cfg.keyframe
@@ -851,12 +860,17 @@ def run_sequence(dataset: SLAMDataset, cfg: SLAMConfig,
             pre_kf = float(np.sqrt(np.mean((frame.rgb - last_rgb) ** 2))) \
                 > kp.pho_thresh
         factor = side_factor(d_since, pre_kf, cfg.downsample)
-        sess, res = session_step(sess, frame, factor=factor, stats=stats)
+        sw = Stopwatch()
+        with tele.span("frame", stream=stream, idx=idx):
+            sess, res = session_step(sess, frame, factor=factor, stats=stats)
+        tele.latency("frame_latency_ms", sw.elapsed() * 1e3, stream=stream)
         if need_iskf or verbose:
+            # The host needs is_kf anyway — telemetry rides the SAME fetch.
             is_kf = bool(jax.device_get(res.is_kf))
             stats.syncs += 1
             if is_kf:
                 last_kf_idx = idx
+                tele.count("keyframes", stream=stream)
             if verbose and idx % 10 == 0:
                 alive, psnr_buf, total = jax.device_get(
                     (res.alive, sess.kf_psnr, sess.kf_total))
@@ -864,9 +878,11 @@ def run_sequence(dataset: SLAMDataset, cfg: SLAMConfig,
                       f"factor={factor} alive={int(alive)} "
                       f"psnr={float(psnr_buf[int(total) - 1]):.2f}")
 
-    return session_finalize(
+    result = session_finalize(
         sess, gt_w2c=[f.w2c_gt for f in dataset.frames],
-        wall_time_s=time.time() - t0, stats=stats)
+        wall_time_s=run_sw.elapsed(), stats=stats)
+    tele.result(stream, result)
+    return result
 
 
 # ---------------------------------------------------------------------------
@@ -1097,7 +1113,7 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
         prev_rgb=rgb, prev_depth=depth,
         kf_psnr=kf_psnr_buf,
         alive_log=sess.alive_log.at[idx].set(alive_now),
-        work=device_work_merge(sess.work, step_work),
+        work=wide_work_add(sess.work, step_work),
         frags=frags_l, sched=sched_l,
     )
     result = StepResult(pose=new_pose, is_kf=jnp.asarray(is_kf),

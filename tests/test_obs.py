@@ -1,0 +1,341 @@
+"""SlamScope acceptance tests.
+
+Three layers:
+
+* Pure-host primitives: log-bucketed histogram quantiles against a
+  numpy-sorted oracle (within the ``sqrt(growth)`` relative-error bound,
+  exact at min/max), exact merges, counter/gauge label semantics, and the
+  :class:`~repro.slam.metrics.WideWork` int32-wrap regression.
+
+* The zero-overhead invariant — THE non-negotiable property of the
+  subsystem: a telemetry-on ``run_sequence`` / ``SlamServer`` run produces
+  **bitwise-identical** outputs to a telemetry-off run, with exactly the
+  same dispatch count (serving: 1.0 dispatches per frame-step), because
+  every sink method rides host values the pipeline already holds.
+
+* Trace export: the written file is valid Chrome-trace-event JSON
+  (Perfetto-loadable) with process metadata, per-step ``stage``/``dispatch``
+  spans containing nested timing, and a matched enqueue→dispatch flow-arrow
+  pair (``ph="s"``/``"f"``) per served frame.
+"""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.launch.mesh import make_data_mesh
+from repro.obs import (
+    Histogram,
+    MetricsRegistry,
+    Telemetry,
+    TraceRecorder,
+    latency_summary,
+)
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.metrics import (
+    DeviceWork,
+    wide_work_add,
+    wide_work_totals,
+    wide_work_zero,
+)
+from repro.slam.server import ShardedPool, SlamServer
+
+
+def _cfg(**kw):
+    # Same static config as tests/test_serve.py / test_session.py so the
+    # three modules share one set of step executables per pytest process.
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return S.SLAMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def duo():
+    cfg = _cfg()
+    scenes = [make_dataset(n, num_frames=5, height=48, width=64,
+                           num_gaussians=400, frag_capacity=48, seed=i)
+              for i, n in enumerate(("room0", "stairs0"))]
+    return cfg, scenes
+
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        eq = (np.array_equal(x, y, equal_nan=True)
+              if np.issubdtype(x.dtype, np.floating) else np.array_equal(x, y))
+        if not eq:
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# registry primitives
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_vs_numpy_oracle():
+    rng = np.random.default_rng(0)
+    # Latency-shaped data: lognormal body plus a heavy tail.
+    data = np.concatenate([rng.lognormal(1.0, 0.7, 5000),
+                           rng.lognormal(3.0, 0.3, 250)])
+    h = Histogram()
+    for v in data:
+        h.record(v)
+    tol = np.sqrt(h.growth)               # the documented error bound
+    for q in (0.5, 0.9, 0.99):
+        oracle = float(np.quantile(data, q))
+        est = h.quantile(q)
+        assert oracle / tol <= est <= oracle * tol, (q, est, oracle)
+    # Exact at the extremes and on the tracked moments.
+    assert h.quantile(0.0) == pytest.approx(data.min())
+    assert h.quantile(1.0) == pytest.approx(data.max())
+    assert h.mean == pytest.approx(data.mean())
+    assert h.count == data.size
+
+
+def test_histogram_zero_values_and_merge():
+    a, b = Histogram(), Histogram()
+    for v in (0.0, -1.0, 2.0, 4.0):
+        a.record(v)
+    for v in (8.0, 16.0):
+        b.record(v)
+    merged = Histogram().merge(a).merge(b)
+    assert merged.count == 6
+    assert merged.min == -1.0 and merged.max == 16.0
+    assert merged.sum == pytest.approx(29.0)
+    assert merged.quantile(0.0) == -1.0   # the <=0 bucket holds the floor
+    with pytest.raises(ValueError, match="bucketing"):
+        Histogram(growth=1.5).merge(a)
+
+
+def test_registry_labels_merge_and_summaries():
+    reg = MetricsRegistry()
+    for s in range(3):
+        for v in (1.0, 2.0, 4.0):
+            reg.histogram("frame_latency_ms", stream=s).record(v * (s + 1))
+    pool = reg.merged_histogram("frame_latency_ms")
+    assert pool.count == 9
+    assert reg.merged_histogram("frame_latency_ms", stream=1).count == 3
+    summary = latency_summary(reg)
+    assert summary["count"] == 9
+    assert summary["p50_ms"] <= summary["p90_ms"] <= summary["p99_ms"]
+    assert latency_summary(MetricsRegistry()) == {"count": 0}
+
+    reg.counter("dispatches", kind="step").inc(7)
+    reg.counter("dispatches", kind="admin").inc(2)
+    assert reg.sum_counters("dispatches", kind="step") == 7
+    assert reg.sum_counters("dispatches", kind="admin") == 2
+    assert reg.sum_counters("dispatches") == 9
+
+    reg.gauge("queue_depth", slot=0).set(2)
+    reg.gauge("queue_depth", slot=0).set(1)
+    reg.gauge("queue_depth", slot=1).set(3)
+    assert reg.gauge("queue_depth", slot=0).hwm == 2
+    assert reg.max_gauge_hwm("queue_depth") == 3
+
+    # Cross-registry fold (the per-device worker -> host view path).
+    other = MetricsRegistry()
+    other.counter("dispatches", kind="step").inc(3)
+    other.histogram("frame_latency_ms", stream=0).record(64.0)
+    other.gauge("queue_depth", slot=0).set(5)
+    reg.merge(other)
+    assert reg.sum_counters("dispatches", kind="step") == 10
+    assert reg.merged_histogram("frame_latency_ms").count == 10
+    assert reg.max_gauge_hwm("queue_depth") == 5
+
+
+# ---------------------------------------------------------------------------
+# WideWork: the session-layer int32-wrap regression
+# ---------------------------------------------------------------------------
+
+def test_wide_work_survives_int32_wrap():
+    """Five frames of 1.5e9 fragments each: a flat int32 accumulator wraps
+    (7.5e9 >> 2**31 - 1); the hi/lo carry-split total is exact."""
+    per_frame = 1_500_000_000            # near the int32 ceiling, per frame
+    frame = DeviceWork(*(np.int32(per_frame) for _ in DeviceWork._fields))
+    acc = wide_work_zero()
+    for _ in range(5):
+        acc = wide_work_add(acc, frame)
+    totals = wide_work_totals(jax.device_get(acc))
+    assert totals["fragments"] == 5 * per_frame == 7_500_000_000
+    assert all(v == 7_500_000_000 for v in totals.values())
+    # And every on-device word stayed inside int32.
+    for leaf in jax.tree.leaves(acc):
+        assert np.asarray(leaf).dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# the zero-overhead invariant: telemetry-on == telemetry-off, bitwise
+# ---------------------------------------------------------------------------
+
+def test_run_sequence_bitwise_with_telemetry(duo):
+    cfg, scenes = duo
+    ds = scenes[0]
+    off = S.run_sequence(ds, cfg)
+    tele = Telemetry.on(trace=True)
+    on = S.run_sequence(ds, cfg, telemetry=tele)
+
+    assert _leaves_equal(on.est_w2c, off.est_w2c)
+    assert on.keyframe_psnr == off.keyframe_psnr
+    assert on.ate == off.ate
+    assert on.work == off.work
+    assert on.alive_per_frame == off.alive_per_frame
+    assert on.dispatches == off.dispatches   # telemetry issued NO dispatch
+    assert on.syncs == off.syncs             # ... and NO fetch
+
+    reg = tele.registry
+    lat = latency_summary(reg, stream=ds.name)
+    assert lat["count"] == ds.num_frames - 1          # one sample per frame
+    assert 0.0 <= lat["p50_ms"] <= lat["p99_ms"] <= lat["max_ms"]
+    # result() folded the finalized counters — same numbers, zero fetches.
+    assert reg.sum_counters("work/fragments",
+                            stream=ds.name) == off.work.fragments
+    assert reg.sum_counters("dispatches", kind="step",
+                            stream=ds.name) == off.dispatches
+    # The trace saw every frame span.
+    names = [e["name"] for e in tele.trace.trace_events()]
+    assert names.count("frame") == ds.num_frames - 1
+
+
+def test_server_bitwise_with_telemetry_and_accounting(duo, tmp_path):
+    """Serving with SlamScope attached: outputs bitwise-equal to the
+    telemetry-off server, dispatches/frame-step exactly 1.0 in BOTH the
+    pool's counters and the registry's kind-split series, per-frame queue
+    waits measured, backpressure counted, admin swaps distinguishable."""
+    cfg, scenes = duo
+    steps = 3
+
+    def serve(telemetry):
+        pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                           mesh=make_data_mesh(1))
+        srv = SlamServer(pool, queue_depth=2, telemetry=telemetry)
+        for t in range(1, steps + 1):
+            for i, ds in enumerate(scenes):
+                srv.submit(i, ds.frames[t])
+            srv.pump()
+        srv.drain()
+        return pool, srv
+
+    pool_off, _ = serve(None)
+    tele = Telemetry.on(trace=True)
+    pool_on, srv_on = serve(tele)
+
+    for i in range(len(scenes)):
+        assert _leaves_equal(pool_on.session(i), pool_off.session(i)), (
+            f"slot {i}: telemetry changed the serving outputs")
+    assert pool_on.stats.dispatches == pool_off.stats.dispatches == steps
+
+    reg = tele.registry
+    # The invariant, measured from the registry itself.
+    assert reg.sum_counters("dispatches", kind="step") == steps
+    assert reg.sum_counters("dispatches", kind="step") / steps == 1.0
+    assert reg.sum_counters("dispatches", kind="admin") == 0
+    assert reg.sum_counters("syncs") == 1             # the drain
+    # Every popped frame's wait was measured, per stream.
+    for i in range(len(scenes)):
+        assert reg.merged_histogram("queue_wait_ms", stream=i).count == steps
+        assert reg.merged_histogram("frame_latency_ms",
+                                    stream=i).count == steps
+    assert reg.max_gauge_hwm("queue_depth") >= 1
+    assert reg.sum_counters("backpressure") == 0
+
+    # Backpressure + admission: the counters split the way BENCH needs.
+    try:
+        srv_on.submit(0, scenes[0].frames[4])
+        srv_on.submit(0, scenes[0].frames[4])
+        srv_on.submit(0, scenes[0].frames[4])         # full queue -> pump(0)
+    except Exception:
+        pass
+    assert reg.sum_counters("backpressure", stream=0) == 1
+    srv_on.retire(1)
+    fresh = make_dataset("desk0", num_frames=5, height=48, width=64,
+                         num_gaussians=400, frag_capacity=48, seed=9)
+    srv_on.admit(S.session_init(fresh, cfg))
+    assert reg.sum_counters("dispatches", kind="admin") == 1
+    assert reg.sum_counters("dispatches", kind="step") == steps  # unchanged
+
+    # -- trace export: valid Chrome JSON, nested spans, flow pairs --------
+    path = tmp_path / "serve_trace.json"
+    assert tele.export_trace(str(path)) == str(path)
+    doc = json.loads(path.read_text())
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert events[0] == {"ph": "M", "name": "process_name", "pid": 0,
+                         "args": {"name": "slamscope"}}
+    spans = [e for e in events if e["ph"] == "X"]
+    for e in spans:
+        assert e["ts"] >= 0.0 and e["dur"] >= 0.0
+    by_name = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(e)
+    assert len(by_name["stage"]) == len(by_name["dispatch"]) == steps
+    assert len(by_name["drain"]) == 1
+    assert len(by_name["admit"]) == len(by_name["retire"]) == 1
+    # Per-frame flow arrows: every enqueue→dispatch arrow ends INSIDE the
+    # dispatch span that consumed the frame (the Chrome binding rule).
+    starts = [e for e in events if e["ph"] == "s"]
+    ends = [e for e in events if e["ph"] == "f"]
+    assert {e["id"] for e in ends} <= {e["id"] for e in starts}
+    n_served = steps * len(scenes)
+    assert len(ends) >= n_served
+    disp = by_name["dispatch"]
+    for e in ends[:n_served]:
+        assert e["bp"] == "e"
+        assert any(d["ts"] <= e["ts"] <= d["ts"] + d["dur"] for d in disp), (
+            "flow end not inside any dispatch span")
+    # Nested spans: each per-step stage span sits inside no other stage
+    # span, and span timestamps are sorted in the export.
+    ts_list = [e.get("ts", -1.0) for e in events[1:]]
+    assert ts_list == sorted(ts_list)
+
+
+def test_telemetry_off_is_free_and_inert():
+    from repro.obs import TELEMETRY_OFF
+    t = TELEMETRY_OFF
+    t.count("x")
+    t.latency("y", 1.0)
+    t.gauge("z", 2)
+    with t.span("nothing"):
+        pass
+    t.flow_start(0, "f")
+    t.flow_end(0, "f")
+    assert t.export_trace("/nonexistent/should_not_write.json") is None
+    assert t.trace.events == []
+    assert t.registry.snapshot() == {}
+
+
+def test_trace_recorder_nesting_and_counters(tmp_path):
+    tr = TraceRecorder(process="unit")
+    tr.thread_name(0, "pump")
+    with tr.span("outer", step=1):
+        with tr.span("inner"):
+            pass
+        tr.instant("mark")
+        tr.counter("queue_depth/slot0", depth=2)
+    path = tr.export(str(tmp_path / "t.json"))
+    events = json.loads(open(path).read())["traceEvents"]
+    x = {e["name"]: e for e in events if e["ph"] == "X"}
+    # Chrome nesting rule: containment on one tid.
+    assert x["outer"]["ts"] <= x["inner"]["ts"]
+    assert (x["inner"]["ts"] + x["inner"]["dur"]
+            <= x["outer"]["ts"] + x["outer"]["dur"] + 1e-6)
+    assert x["outer"]["args"] == {"step": 1}
+    assert any(e["ph"] == "C" and e["args"] == {"depth": 2} for e in events)
+    assert any(e["ph"] == "i" and e["name"] == "mark" for e in events)
+    assert any(e["ph"] == "M" and e["name"] == "thread_name" for e in events)
+    # Disabled recorder: span() is a shared null context, no events.
+    off = TraceRecorder(enabled=False)
+    with off.span("nope"):
+        off.instant("nope")
+        off.counter("nope", v=1)
+    assert off.events == []

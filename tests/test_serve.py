@@ -88,12 +88,35 @@ def test_frame_queue_bounded_lockstep():
     assert not q.ready([0, 1])          # slot 1 starved
     assert q.put(1, "b0")
     assert q.ready([0, 1])              # free slot 2 doesn't gate
-    frame, waited = q.pop(0)
-    assert frame == "a0" and waited >= 0.0
+    frame, waited, fid = q.pop(0)
+    assert frame == "a0" and waited >= 0.0 and fid >= 0
     assert q.fill(0) == 1
     assert q.clear(0) == 1 and q.fill(0) == 0
     with pytest.raises(ValueError, match="depth"):
         FrameQueue(slots=1, depth=0)
+
+
+def test_frame_queue_telemetry_accounting():
+    """With a SlamScope sink attached, the queue reports every depth change
+    (per-slot ``queue_depth`` gauge whose hwm is the high-water mark) and
+    allocates one flow id per accepted frame — rejected puts get neither."""
+    from repro.obs import Telemetry
+
+    tele = Telemetry.on(trace=True)
+    q = FrameQueue(slots=2, depth=2, telemetry=tele)
+    assert q.put(0, "a0") and q.put(0, "a1")
+    assert not q.put(0, "a2")                     # rejected: no flow, no gauge
+    assert q.put(1, "b0")
+    reg = tele.registry
+    assert reg.gauge("queue_depth", slot=0).hwm == 2
+    assert reg.gauge("queue_depth", slot=1).hwm == 1
+    starts = [e for e in tele.trace.events if e["ph"] == "s"]
+    assert len(starts) == 3                       # one arrow per accepted put
+    assert len({e["id"] for e in starts}) == 3    # ids unique
+    q.pop(0)
+    q.clear(0)
+    assert reg.gauge("queue_depth", slot=0).value == 0
+    assert reg.gauge("queue_depth", slot=0).hwm == 2   # hwm survives the pops
 
 
 # ---------------------------------------------------------------------------
