@@ -48,6 +48,7 @@ def main() -> None:
         "sparse": bench_sparse.run,
         "sessions": bench_sessions.run,
         "serve": bench_serve.run,
+        "serve_v2": bench_serve.run_v2,
     }
     chosen = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -12,6 +12,11 @@ Checks three things and exits 1 (with a findings list) on any failure:
    (frames actually flowed through the queue).
 3. **The serving invariant** — ``dispatches_per_frame_step == 1.0`` on the
    serve row and every sub-row.
+4. **The serve_v2 gates** (when the row is present) — >= 32 mixed-rate
+   streams, per-class latency summaries with monotone quantiles, the
+   per-group dispatches/frame-step invariant, at least one row migration,
+   zero recompiles after warmup, and the fast-class p99 queue wait
+   strictly below the lockstep-v1 baseline.
 
 Run:  PYTHONPATH=src python -m benchmarks.validate_bench [BENCH_slam.json]
 """
@@ -26,7 +31,7 @@ import sys
 
 #: Rows amended into the report by their own bench modules; each must be
 #: individually stamped (the top-level stamp covers only bench_slam_fps).
-AMENDED_ROWS = ("wsu", "sparse", "sessions", "serve")
+AMENDED_ROWS = ("wsu", "sparse", "sessions", "serve", "serve_v2")
 
 
 def _check_latency_summary(lat, where: str, errs: list) -> None:
@@ -60,7 +65,7 @@ def validate(report: dict) -> list:
         if key not in report:
             errs.append(
                 f"missing row: {key!r} (run `python -m benchmarks.run "
-                f"--only slam_fps,wsu,sparse,sessions,serve`)")
+                f"--only slam_fps,wsu,sparse,sessions,serve,serve_v2`)")
             continue
         _check_stamp(report[key], key, errs)
 
@@ -92,7 +97,50 @@ def validate(report: dict) -> list:
                     or row["queue_depth_hwm"] < 1:
                 errs.append(f"serve.rows.{dkey}.queue_depth_hwm: expected "
                             f"int >= 1, got {row.get('queue_depth_hwm')!r}")
+    _check_serve_v2(report.get("serve_v2"), errs)
     return errs
+
+
+def _check_serve_v2(v2, errs: list) -> None:
+    """The continuous-batching row's own gates (PR 9): scale, the
+    per-group serving invariant, migrations, zero recompiles, and the
+    fast-class head-of-line win over lockstep v1."""
+    if not isinstance(v2, dict):
+        return                      # absence is reported via AMENDED_ROWS
+    if not isinstance(v2.get("streams"), int) or v2["streams"] < 32:
+        errs.append(f"serve_v2.streams: expected >= 32 mixed-rate streams, "
+                    f"got {v2.get('streams')!r}")
+    if v2.get("recompiles_after_warmup") != 0:
+        errs.append("serve_v2.recompiles_after_warmup != 0 "
+                    f"({v2.get('recompiles_after_warmup')!r})")
+    if not isinstance(v2.get("migrations"), int) or v2["migrations"] < 1:
+        errs.append(f"serve_v2.migrations: expected int >= 1, "
+                    f"got {v2.get('migrations')!r}")
+    groups = v2.get("per_group")
+    if not isinstance(groups, dict) or not groups:
+        errs.append("serve_v2.per_group: missing per-group breakdown")
+    else:
+        for gname, row in groups.items():
+            if row.get("steps") and row.get(
+                    "dispatches_per_frame_step") != 1.0:
+                errs.append(
+                    f"serve_v2.per_group.{gname}.dispatches_per_frame_step"
+                    f" != 1.0 ({row.get('dispatches_per_frame_step')!r})")
+    for cls in ("fast", "slow"):
+        _check_latency_summary(
+            (v2.get("frame_latency_ms") or {}).get(cls),
+            f"serve_v2.frame_latency_ms.{cls}", errs)
+        _check_latency_summary(
+            (v2.get("queue_wait_ms") or {}).get(cls),
+            f"serve_v2.queue_wait_ms.{cls}", errs)
+    cmp = v2.get("fast_p99_queue_wait_ms")
+    if not isinstance(cmp, dict) or not all(
+            isinstance(cmp.get(k), (int, float)) for k in ("v1", "v2")):
+        errs.append("serve_v2.fast_p99_queue_wait_ms: missing v1/v2 "
+                    "comparison")
+    elif not cmp["v2"] < cmp["v1"]:
+        errs.append("serve_v2: fast-class p99 queue wait did not beat "
+                    f"lockstep v1 (v2={cmp['v2']}ms, v1={cmp['v1']}ms)")
 
 
 def main(argv=None) -> int:

@@ -28,6 +28,7 @@ aggregate is ``registry.merged_histogram("frame_latency_ms")``.
 from __future__ import annotations
 
 import math
+import threading
 from typing import Dict, Iterable, List, Optional, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
@@ -177,16 +178,27 @@ class MetricsRegistry:
     ``counter``/``gauge``/``histogram`` are get-or-create; per-stream
     series come from labeling (``stream=slot``), and pool aggregates from
     :meth:`merged_histogram` / :meth:`sum_counters`.
+
+    Instrument *creation* is lock-guarded so a producer thread (the sched
+    tier's ingest worker) and the dispatch thread get-or-creating the same
+    key never orphan an instrument.  Recording into one series stays
+    single-writer by convention — each series is owned by exactly one
+    thread (queue-side series ride the FrameQueue lock; dispatch-side
+    series are only touched by the dispatch thread).
     """
 
     def __init__(self):
         self._instruments: Dict[Tuple[str, str, Tuple], object] = {}
+        self._create_lock = threading.Lock()
 
     def _get(self, kind: str, name: str, labels: dict, factory):
         key = (kind, name, _label_key(labels))
         inst = self._instruments.get(key)
         if inst is None:
-            inst = self._instruments[key] = factory()
+            with self._create_lock:
+                inst = self._instruments.get(key)
+                if inst is None:
+                    inst = self._instruments[key] = factory()
         return inst
 
     def counter(self, name: str, **labels) -> Counter:

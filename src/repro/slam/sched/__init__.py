@@ -1,0 +1,52 @@
+"""SlamServe v2 — the continuous-batching scheduler tier above ShardedPool.
+
+SlamServe v1 (PR 5) serves S streams through ONE lockstep pool: a starved
+stream stalls its peers (head-of-line blocking) and changing the pool
+width recompiles.  This package is the LLM-continuous-batching answer for
+SLAM streams, in four pieces:
+
+* :mod:`~repro.slam.sched.ladder` — :class:`PoolLadder`: pre-compiled
+  serving pools at a ladder of widths (default S ∈ {2, 4, 8}) sharing the
+  serving tier's one executable cache, warmed once so admission and
+  migration NEVER recompile.
+* :mod:`~repro.slam.sched.policy` — :class:`QueueDepthPolicy`: the
+  queue-depth / oldest-deadline policy deciding which group to pump and
+  which row to migrate when a group blocks.
+* :mod:`~repro.slam.sched.scheduler` — :class:`SlamScheduler`: the
+  dispatch-thread orchestrator — admission, row migration between pool
+  widths (retire + admit via the existing slot-swap machinery, counted as
+  ``kind="admin"`` dispatches, bitwise-transparent to the stream), and
+  independent per-group pumping (a starved group skips a tick instead of
+  stalling everyone).
+* :mod:`~repro.slam.sched.ingest` — :class:`IngestWorker`: the
+  producer-thread that decodes/stages frames into the (thread-safe)
+  FrameQueues off the dispatch thread.
+
+The invariants of the tiers below carry forward: every stream's row stays
+bitwise-equal to a solo ``run_sequence`` regardless of which pool stepped
+it or how often it migrated, and dispatches/frame-step stays exactly 1.0
+per group as measured from the obs registry (tests/test_sched.py).
+"""
+
+from repro.slam.sched.ingest import IngestWorker, default_decode
+from repro.slam.sched.ladder import LadderRung, PoolLadder
+from repro.slam.sched.policy import (
+    GroupView,
+    Migration,
+    QueueDepthPolicy,
+    SlotView,
+)
+from repro.slam.sched.scheduler import SchedStats, SlamScheduler
+
+__all__ = [
+    "GroupView",
+    "IngestWorker",
+    "LadderRung",
+    "Migration",
+    "PoolLadder",
+    "QueueDepthPolicy",
+    "SchedStats",
+    "SlamScheduler",
+    "SlotView",
+    "default_decode",
+]

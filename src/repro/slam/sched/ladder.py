@@ -1,0 +1,136 @@
+"""Pool-width ladder: pre-compiled serving pools at S ∈ {2, 4, 8}.
+
+A :class:`~repro.slam.server.ShardedPool`'s ``step_many`` executable is
+specialized on the pool width, so v1's answer to "one more stream than the
+pool holds" was a multi-second recompile on the serving path.  The ladder
+fixes the cost model instead of the compiler: build the handful of widths
+the deployment will ever use UP FRONT, warm each executable once, and from
+then on admission is a slot swap into whichever rung has room and growth
+is a row migration up the ladder — both cached-executable dispatches.
+
+All rungs share the module-level serve caches in ``slam/server.py`` and
+the per-row trace caches in ``slam/session.py`` (the inner trace of a
+width-8 step IS the solo trace, unrolled), so the ladder adds executables,
+never per-row retraces — :func:`~repro.slam.server.compile_cache_stats`
+taken after :meth:`PoolLadder.warmup` must be bitwise-equal to the same
+census after any amount of serving (tests/test_sched.py and the
+``serve_v2`` BENCH row both enforce it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.launch.mesh import make_data_mesh
+from repro.obs import Telemetry, telemetry_or_off
+from repro.slam.engine import EngineStats
+from repro.slam.server import ServeStats, ShardedPool, SlamServer
+from repro.slam.session import SlamSession
+
+__all__ = ["LadderRung", "PoolLadder"]
+
+
+@dataclasses.dataclass
+class LadderRung:
+    """One width of the ladder: a sharded pool plus its queue-fed server.
+    Rungs start with every slot free (template-filled scratch rows)."""
+
+    width: int
+    pool: ShardedPool
+    server: SlamServer
+
+    @property
+    def name(self) -> str:
+        return f"S{self.width}"
+
+
+def _rung_mesh(width: int, max_devices: int):
+    """The widest 1-D data mesh a rung of ``width`` rows can shard over:
+    rows shard whole, so the device count must divide the width."""
+    d = min(width, max_devices)
+    while width % d != 0:
+        d -= 1
+    return make_data_mesh(d)
+
+
+class PoolLadder:
+    """Pre-compiled serving pools at a ladder of widths, one shared
+    telemetry sink, one compile cache.
+
+    Construction stacks ``template`` (a freshly ``session_init``-ed solo
+    session — its state is scratch until a real stream is admitted) into
+    one pool per width; :meth:`warmup` then compiles the step and swap
+    executables for every rung and resets the counters, so everything the
+    registry measures afterwards is real serving work and admission never
+    compiles.  Each rung's server is named ``S{width}`` — the ``group``
+    label on its dispatch counters and spans — and defaults to no live
+    slots (streams arrive via the scheduler's admission).
+    """
+
+    def __init__(self, template: SlamSession,
+                 widths: Sequence[int] = (2, 4, 8), queue_depth: int = 2,
+                 mesh=None, telemetry: Optional[Telemetry] = None):
+        widths = sorted(set(int(w) for w in widths))
+        if not widths or widths[0] < 1:
+            raise ValueError(f"ladder widths must be positive, got {widths}")
+        if template.batch is not None:
+            raise ValueError("ladder template must be a solo session; got "
+                             f"batch={template.batch}")
+        self.tele = telemetry_or_off(telemetry)
+        self.template = template
+        max_dev = jax.device_count() if mesh is None else None
+        self.rungs: List[LadderRung] = []
+        for w in widths:
+            m = mesh if mesh is not None else _rung_mesh(w, max_dev)
+            pool = ShardedPool([template] * w, mesh=m)
+            server = SlamServer(pool, queue_depth=queue_depth, live=[],
+                                telemetry=self.tele, name=f"S{w}")
+            self.rungs.append(LadderRung(width=w, pool=pool, server=server))
+
+    # -- introspection -----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self.rungs)
+
+    def __getitem__(self, ix: int) -> LadderRung:
+        return self.rungs[ix]
+
+    @property
+    def widths(self) -> List[int]:
+        return [r.width for r in self.rungs]
+
+    @property
+    def capacity(self) -> int:
+        return sum(r.width for r in self.rungs)
+
+    def free_slots(self) -> int:
+        return sum(len(r.server.free_slots()) for r in self.rungs)
+
+    def live_streams(self) -> int:
+        return sum(len(r.server.live_slots()) for r in self.rungs)
+
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self) -> dict:
+        """Compile every rung's step AND swap executable (one blank-frame
+        step plus one template swap each, blocked to completion), then
+        reset the dispatch counters so warmup never pollutes the measured
+        dispatches/frame-step ratio.  Returns the post-warmup
+        :func:`~repro.slam.server.compile_cache_stats` census — the
+        baseline the zero-recompile gate compares against."""
+        from repro.slam.server import compile_cache_stats
+
+        for rung in self.rungs:
+            with self.tele.span("warmup", group=rung.name):
+                blank = rung.server._blank
+                rung.pool.step([blank] * rung.width)
+                rung.pool.swap(0, self.template)
+                jax.block_until_ready(jax.tree.leaves(rung.pool.stacked))
+            # Warmup state is scratch (no slot is live); drop its counters.
+            rung.pool.stats = EngineStats()
+            rung.pool.admin_dispatches = 0
+            rung.server.stats = ServeStats()
+        return compile_cache_stats()

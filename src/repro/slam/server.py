@@ -45,7 +45,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import List, Optional, Sequence
+import itertools
+import threading
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +91,33 @@ _SERVE_STEP_CACHE: dict = {}
 _SERVE_SWAP_CACHE: dict = {}
 
 
+def _jit_traces(fns) -> int:
+    """Total traced-signature count across jitted callables (0 where the
+    jax version doesn't expose ``_cache_size``)."""
+    return sum(getattr(f, "_cache_size", lambda: 0)() for f in fns)
+
+
+def compile_cache_stats() -> dict:
+    """Executable-cache census across the serving stack: entry counts of the
+    serve step/swap caches and the session-tier step/boot caches, plus the
+    per-jit traced-signature totals.  The sched tier's **zero-recompile
+    invariant** is measured as this dict being EQUAL before and after a
+    serving phase (admissions, migrations and steps included) — any retrace
+    or new executable shows up as a changed number."""
+    from repro.slam import session as _session
+
+    return {
+        "serve_step_entries": len(_SERVE_STEP_CACHE),
+        "serve_swap_entries": len(_SERVE_SWAP_CACHE),
+        "serve_step_traces": _jit_traces(_SERVE_STEP_CACHE.values()),
+        "serve_swap_traces": _jit_traces(_SERVE_SWAP_CACHE.values()),
+        "session_step_entries": len(_session._STEP_CACHE),
+        "session_step_traces": _jit_traces(_session._STEP_CACHE.values()),
+        "session_boot_entries": len(_session._BOOT_CACHE),
+        "session_boot_traces": _jit_traces(_session._BOOT_CACHE.values()),
+    }
+
+
 class ShardedPool:
     """S stacked sessions laid out over D devices, stepped by ONE dispatch.
 
@@ -119,6 +148,13 @@ class ShardedPool:
         # One NamedSharding, applied to every leaf as a pytree prefix:
         # leading S axis on "data", everything else replicated within a row.
         self.sharding = to_shardings(self.mesh, P("data"))
+        # Canonical placement for solo rows crossing the pool boundary
+        # (admit input / retire output): replicated on this pool's mesh.
+        # Pinning it keeps the swap executable's input signature stable no
+        # matter where a row comes from — a fresh host-side session_init or
+        # a row gathered out of ANOTHER pool by the sched tier's migration
+        # — so admission never retraces (the zero-recompile invariant).
+        self.row_sharding = to_shardings(self.mesh, P())
         self._stacked = jax.device_put(stack_sessions(sessions),
                                        self.sharding)
         self.stats = EngineStats()     # step dispatches / result syncs
@@ -186,6 +222,7 @@ class ShardedPool:
         executable serves every slot (counted in ``admin_dispatches``, not
         the per-frame-step ``stats``)."""
         validate_admission(new_session, self._stacked)
+        new_session = jax.device_put(new_session, self.row_sharding)
         key = ("serve-swap",) + self._cache_key()
         if key not in _SERVE_SWAP_CACHE:
             def swap(stacked, row, slot_ix):
@@ -199,8 +236,8 @@ class ShardedPool:
 
             _SERVE_SWAP_CACHE[key] = jax.jit(
                 swap,
-                in_shardings=(self.sharding, None, None),
-                out_shardings=(self.sharding, None),
+                in_shardings=(self.sharding, self.row_sharding, None),
+                out_shardings=(self.sharding, self.row_sharding),
                 **_donate_kwargs("stacked"))
         self.admin_dispatches += 1
         self._stacked, old = _SERVE_SWAP_CACHE[key](
@@ -217,6 +254,14 @@ class ShardedPool:
 # ---------------------------------------------------------------------------
 
 
+#: Flow ids are allocated process-globally (not per queue) so a trace fed
+#: by several queues — the sched tier runs one FrameQueue per pool group —
+#: never reuses an arrow id, and a frame migrated between queues keeps the
+#: arrow it opened at first enqueue.  ``itertools.count`` is atomic under
+#: the GIL, so producer threads share it without a lock.
+_FLOW_IDS = itertools.count()
+
+
 class FrameQueue:
     """Bounded per-slot frame staging queues (host memory only).
 
@@ -226,7 +271,13 @@ class FrameQueue:
     can account queue wait per frame AND draw the enqueue→dispatch flow
     arrow in the trace.  The telemetry sink sees every depth change
     (``queue_depth`` gauge per slot — its ``hwm`` is the queue-depth
-    high-water mark BENCH reports)."""
+    high-water mark BENCH reports).
+
+    Thread-safe: every mutation (``put``/``pop``/``fill``/``clear``/
+    ``take``/``load``) and the ``ready`` check hold one internal lock, and
+    the depth gauge updates ride inside it — the sched tier's ingest worker
+    produces from its own thread while the dispatch thread consumes.
+    """
 
     def __init__(self, slots: int, depth: int = 2,
                  telemetry: Optional[Telemetry] = None):
@@ -236,7 +287,7 @@ class FrameQueue:
         self.tele = telemetry_or_off(telemetry)
         self._q: List[collections.deque] = [
             collections.deque() for _ in range(slots)]
-        self._next_flow = 0
+        self._lock = threading.Lock()
 
     def _depth_changed(self, slot: int) -> None:
         n = len(self._q[slot])
@@ -244,36 +295,82 @@ class FrameQueue:
         self.tele.trace.counter(f"queue_depth/slot{slot}", depth=n)
 
     def put(self, slot: int, frame) -> bool:
-        q = self._q[slot]
-        if len(q) >= self.depth:
-            return False
-        fid = self._next_flow
-        self._next_flow += 1
-        q.append((frame, now_s(), fid))
-        self.tele.flow_start(fid, "frame")
-        self._depth_changed(slot)
-        return True
+        with self._lock:
+            q = self._q[slot]
+            if len(q) >= self.depth:
+                return False
+            fid = next(_FLOW_IDS)
+            q.append((frame, now_s(), fid))
+            self.tele.flow_start(fid, "frame")
+            self._depth_changed(slot)
+            return True
 
     def pop(self, slot: int):
         """Oldest queued ``(frame, waited_s, flow_id)`` for ``slot``."""
-        frame, t0, fid = self._q[slot].popleft()
-        self._depth_changed(slot)
+        with self._lock:
+            frame, t0, fid = self._q[slot].popleft()
+            self._depth_changed(slot)
         return frame, now_s() - t0, fid
 
     def fill(self, slot: int) -> int:
-        return len(self._q[slot])
+        with self._lock:
+            return len(self._q[slot])
 
     def clear(self, slot: int) -> int:
-        n = len(self._q[slot])
-        self._q[slot].clear()
-        if n:
-            self._depth_changed(slot)
-        return n
+        with self._lock:
+            n = len(self._q[slot])
+            self._q[slot].clear()
+            if n:
+                self._depth_changed(slot)
+            return n
 
     def ready(self, slots) -> bool:
         """True when every listed slot has a frame queued — a lockstep
         batch can dispatch."""
-        return all(self._q[s] for s in slots)
+        with self._lock:
+            return all(self._q[s] for s in slots)
+
+    def head_age_s(self, slot: int) -> Optional[float]:
+        """Seconds the oldest queued frame of ``slot`` has been waiting
+        (the scheduler policy's oldest-deadline signal), or None when
+        empty."""
+        with self._lock:
+            q = self._q[slot]
+            return (now_s() - q[0][1]) if q else None
+
+    # -- migration support (the sched tier's queue transplant) -------------
+
+    def take(self, slot: int) -> List[Tuple]:
+        """Drain ``slot``'s raw entries — ``(frame, enqueue_ts, flow_id)``
+        triples with their ORIGINAL timestamps and flow ids — so a row
+        migration can transplant them into the destination pool's queue
+        without dropping frames, resetting waits, or breaking trace
+        arrows."""
+        with self._lock:
+            q = self._q[slot]
+            entries = list(q)
+            q.clear()
+            if entries:
+                self._depth_changed(slot)
+            return entries
+
+    def load(self, slot: int, entries: Sequence[Tuple]) -> None:
+        """Requeue entries previously ``take``-n from a source queue, at
+        the head-preserving order.  The destination slot must be empty and
+        the batch must fit the depth bound (migrations move whole queues
+        between equal-depth queues, so this never triggers in practice)."""
+        if not entries:
+            return
+        with self._lock:
+            q = self._q[slot]
+            if q:
+                raise ValueError(f"slot {slot} is not empty "
+                                 f"({len(q)} frames); cannot load into it")
+            if len(entries) > self.depth:
+                raise ValueError(f"{len(entries)} entries exceed queue "
+                                 f"depth {self.depth}")
+            q.extend(entries)
+            self._depth_changed(slot)
 
 
 @dataclasses.dataclass
@@ -325,14 +422,23 @@ class SlamServer:
 
     def __init__(self, pool: ShardedPool, queue_depth: int = 2,
                  live: Optional[Sequence[int]] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None, name: str = ""):
         self.pool = pool
+        self.name = name
+        # Per-group label on the kind-split dispatch counters, so a ladder
+        # of servers sharing one registry stays measurable per group.  A
+        # nameless (v1) server keeps the unlabeled series.
+        self._glab = {"group": name} if name else {}
         self.tele = telemetry_or_off(telemetry)
         self.queue = FrameQueue(pool.size, queue_depth, telemetry=self.tele)
         self.stats = ServeStats()
         self._live = [False] * pool.size
         for s in (range(pool.size) if live is None else live):
             self._live[s] = True
+        # Telemetry stream label per slot — defaults to the slot index (the
+        # v1 convention); the sched tier relabels on admit so a stream's
+        # latency series survives row migrations between pools.
+        self._labels: List = list(range(pool.size))
         intr = pool.meta.intr
         self._blank = (np.zeros((intr.height, intr.width, 3), np.float32),
                        np.zeros((intr.height, intr.width), np.float32))
@@ -345,6 +451,15 @@ class SlamServer:
 
     def free_slots(self) -> List[int]:
         return [s for s, lv in enumerate(self._live) if not lv]
+
+    def slot_label(self, slot: int):
+        """The telemetry ``stream=`` label of ``slot``."""
+        return self._labels[slot]
+
+    def label_slot(self, slot: int, label) -> None:
+        """Relabel ``slot``'s telemetry stream series (sched tier: stream
+        ids follow sessions across migrations; slots are transient)."""
+        self._labels[slot] = label
 
     # -- ingest ------------------------------------------------------------
 
@@ -359,7 +474,7 @@ class SlamServer:
         with self.tele.span("submit", slot=slot):
             if not self.queue.put(slot, frame):
                 self.stats.backpressure_events += 1
-                self.tele.count("backpressure", stream=slot)
+                self.tele.count("backpressure", stream=self._labels[slot])
                 self.pump()
                 if not self.queue.put(slot, frame):
                     raise QueueFull(
@@ -368,6 +483,23 @@ class SlamServer:
                         "dispatch (a peer stream is starved); submit "
                         "frames for the other live slots")
             self.stats.frames_in += 1
+
+    def offer(self, slot: int, frame) -> bool:
+        """Non-blocking ingest: queue one frame for ``slot`` if its queue
+        has room, else return ``False`` — and NEVER pump.  This is the
+        producer-thread entry point (the sched tier's ingest worker calls
+        it off the dispatch thread; dispatching from a producer thread
+        would race the dispatcher), so unlike :meth:`submit` it must not
+        issue device work under backpressure."""
+        if not self._live[slot]:
+            raise ValueError(f"slot {slot} is not live; admit a session "
+                             "first")
+        if not self.queue.put(slot, frame):
+            self.stats.backpressure_events += 1
+            self.tele.count("backpressure", stream=self._labels[slot])
+            return False
+        self.stats.frames_in += 1
+        return True
 
     # -- dispatch ----------------------------------------------------------
 
@@ -394,22 +526,22 @@ class SlamServer:
                         frame, waited, fid = self.queue.pop(s)
                         self.stats.queue_wait_s += waited
                         self.tele.latency("queue_wait_ms", waited * 1e3,
-                                          stream=s)
+                                          stream=self._labels[s])
                         popped.append((s, now_s() - waited, fid))
                         rows.append(frame)
                     else:
                         rows.append(self._blank)
                 obs = self.pool.stage(rows)
             self.stats.stage_s += sw.elapsed()
-            with self.tele.span("dispatch", step=step_no):
+            with self.tele.span("dispatch", step=step_no, **self._glab):
                 for _, _, fid in popped:
                     self.tele.flow_end(fid, "frame")
                 self.last_result = self.pool.step(obs)
-            self.tele.count("dispatches", kind="step")
+            self.tele.count("dispatches", kind="step", **self._glab)
             t1 = now_s()
             for s, t_enq, _ in popped:
                 self.tele.latency("frame_latency_ms", (t1 - t_enq) * 1e3,
-                                  stream=s)
+                                  stream=self._labels[s])
             self.tele.latency("step_host_ms", sw.elapsed() * 1e3)
             self.stats.steps += 1
             steps += 1
@@ -427,34 +559,43 @@ class SlamServer:
 
     # -- admission control -------------------------------------------------
 
-    def admit(self, session: SlamSession) -> int:
+    def admit(self, session: SlamSession, label=None) -> int:
         """Place ``session`` in the first free slot (one row swap across
         the shards) and mark it live.  Raises :class:`PoolFull` when every
-        slot is serving — the admission backpressure signal."""
+        slot is serving — the admission backpressure signal.  ``label``
+        names the slot's telemetry stream series (default: the slot
+        index)."""
         free = self.free_slots()
         if not free:
             raise PoolFull(
                 f"all {self.pool.size} slots are live; retire a session "
                 "first (admission backpressure)")
         slot = free[0]
-        with self.tele.span("admit", slot=slot):
+        with self.tele.span("admit", slot=slot, **self._glab):
             self.pool.swap(slot, session)
-        self.tele.count("dispatches", kind="admin")
-        self.queue.clear(slot)
+        self.tele.count("dispatches", kind="admin", **self._glab)
+        # A free slot's queue is empty in normal operation (retire clears
+        # it and dead slots refuse submits), but any straggler frames a
+        # caller managed to park there must not leak into the new stream —
+        # drop and account them like retire does.
+        self.stats.frames_dropped += self.queue.clear(slot)
         self._live[slot] = True
+        self._labels[slot] = slot if label is None else label
         self.stats.admits += 1
         return slot
 
     def retire(self, slot: int) -> SlamSession:
         """Snapshot ``slot``'s row as a solo session and free the slot.
         Queued-but-undispatched frames for the slot are dropped (counted
-        in ``stats.frames_dropped``)."""
+        in ``stats.frames_dropped``; a migration that must NOT drop them
+        ``queue.take``-s the entries first and ``load``-s them into the
+        destination queue)."""
         if not self._live[slot]:
             raise ValueError(f"slot {slot} is not live")
         self.stats.frames_dropped += self.queue.clear(slot)
         self._live[slot] = False
         self.stats.retires += 1
-        with self.tele.span("retire", slot=slot):
+        with self.tele.span("retire", slot=slot, **self._glab):
             row = self.pool.session(slot)
         return row
 

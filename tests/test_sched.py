@@ -1,0 +1,477 @@
+"""SlamServe v2 scheduler acceptance tests.
+
+Three layers:
+
+* Policy units (pure host logic, no jax): :class:`QueueDepthPolicy`
+  decisions over hand-built :class:`GroupView` snapshots — pump order,
+  evict-vs-rescue migration choice, cooldown freeze, per-tick budget.
+
+* Integration on a small ladder (widths (1, 2) so this module reuses the
+  S=2 serve executable test_serve.py already compiled in-process):
+  warmup → zero recompiles across admissions/migrations/steps, bitwise
+  row parity vs solo runs under manual AND policy-driven migration with
+  mid-migration admit/retire churn, threaded ingest end-to-end, and the
+  per-group dispatches/frame-step == 1.0 invariant measured from the obs
+  registry.
+
+* The full S=2→4→8 ladder (slow-marked: three sharded executables
+  compile, ~3 min) — the ISSUE's migration-parity acceptance criterion
+  verbatim.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.obs import Telemetry, latency_summary
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.server import PoolFull, compile_cache_stats
+from repro.slam.sched import (
+    GroupView,
+    IngestWorker,
+    Migration,
+    PoolLadder,
+    QueueDepthPolicy,
+    SlamScheduler,
+    SlotView,
+)
+
+
+def _cfg(**kw):
+    # Same static config as tests/test_serve.py so both modules share one
+    # set of serve executables within a pytest process.
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return S.SLAMConfig(**base)
+
+
+def _scene(name, seed):
+    return make_dataset(name, num_frames=5, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48, seed=seed)
+
+
+def _leaves_equal(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        eq = (np.array_equal(x, y, equal_nan=True)
+              if np.issubdtype(x.dtype, np.floating) else np.array_equal(x, y))
+        if not eq:
+            return False
+    return True
+
+
+def _solo(ds, cfg, upto=None):
+    """The unmigrated baseline: init + one solo session_step per frame."""
+    sess = S.session_init(ds, cfg)
+    for f in ds.frames[1:upto]:
+        sess, _ = S.session_step(sess, f)
+    return sess
+
+
+def _queued(sched, sid):
+    loc = sched.placement(sid)
+    return sched.ladder[loc[0]].server.queue.fill(loc[1]) if loc else 0
+
+
+def _drive(sched, feeds, close=(), timeout_s=120.0):
+    """Single-threaded dispatch driver: offer every frame of ``feeds``
+    (sid → frame list) with backpressure retries, closing each sid in
+    ``close`` as soon as its feed is exhausted (so finished streams
+    auto-retire and stop gating their lockstep peers), and tick until all
+    fed queues drain and every closed stream finishes."""
+    pending = {sid: list(frames) for sid, frames in feeds.items()}
+    close = set(close)
+    deadline = time.monotonic() + timeout_s
+
+    def behind():
+        return (any(pending.values())
+                or any(_queued(sched, sid) for sid in feeds)
+                or any(sid not in sched.finished() for sid in close))
+
+    while behind():
+        assert time.monotonic() < deadline, "driver stalled"
+        for sid in list(pending):
+            frames = pending[sid]
+            while frames and sched.offer(sid, frames[0]):
+                frames.pop(0)
+            if not frames:
+                if sid in close:
+                    sched.close(sid)
+                del pending[sid]
+        sched.tick()
+    sched.drain()
+
+
+# ---------------------------------------------------------------------------
+# policy units (no jax)
+# ---------------------------------------------------------------------------
+
+def _sv(slot, stream, fill, age=None):
+    return SlotView(slot=slot, stream=stream, fill=fill, head_age_s=age)
+
+
+def _gv(rung, width, free, blocked_for, slots):
+    return GroupView(rung=rung, name=f"S{width}", width=width, free=free,
+                     blocked_for_s=blocked_for, slots=tuple(slots))
+
+
+def test_policy_pump_order_oldest_deadline_first():
+    views = [
+        _gv(0, 2, 0, 0.0, [_sv(0, "a", 1, 0.10), _sv(1, "b", 1, 0.02)]),
+        _gv(1, 4, 2, 0.0, [_sv(0, "c", 2, 0.50), _sv(1, "d", 1, 0.30)]),
+        _gv(2, 8, 7, 0.0, [_sv(0, "e", 0, None)]),     # starving: skips
+        _gv(3, 16, 16, 0.0, []),                       # empty: skips
+    ]
+    assert QueueDepthPolicy().pump_order(views) == [1, 0]
+
+
+def test_policy_evicts_starving_blocker_to_slow_lane():
+    """A blocked group sheds its STARVING row into a group with room and
+    no waiters (a slow lane) — one move unblocks every waiter at once."""
+    views = [
+        _gv(0, 2, 0, 0.2, [_sv(0, "fast", 2, 0.4), _sv(1, "slow", 0)]),
+        _gv(1, 4, 1, 0.0, [_sv(0, "crawl", 0)]),       # slow lane with room
+    ]
+    plans = QueueDepthPolicy(starve_s=0.05).migrations(views)
+    assert plans == [Migration("slow", 0, 1, "evict-starved")]
+
+
+def test_policy_pools_slow_with_slow_never_poisons_clean_lane():
+    """With no waiter-free lane, a starving blocker lands in a lane that
+    is ALREADY starving (the slow pool with the slow) — and never in a
+    pure ready lane, which would poison the group running clean."""
+    views = [
+        _gv(0, 2, 0, 0.2, [_sv(0, "fast", 2, 0.4), _sv(1, "slow", 0)]),
+        _gv(1, 4, 1, 0.0, [_sv(0, "f1", 1, 0.05), _sv(1, "s1", 0)]),
+        _gv(2, 4, 1, 0.0, [_sv(0, "f2", 1, 0.05), _sv(1, "f3", 1, 0.05)]),
+    ]
+    plans = QueueDepthPolicy(starve_s=0.05).migrations(views)
+    # rung 2 (clean) has room but must not receive the slow row; rung 1
+    # is already paying the slow price, so it absorbs the blocker.
+    assert plans[0] == Migration("slow", 0, 1, "evict-starved")
+
+
+def test_policy_cleans_almost_clean_lane_first():
+    """With one free slot and two blocked groups, the group with FEWER
+    starving rows is served first even if the other has blocked longer —
+    evicting its last slow row forms a clean lane (next tick's rescue
+    target), which a move inside the deeply-mixed group never would."""
+    views = [
+        _gv(0, 2, 0, 0.1, [_sv(0, "fa", 2, 0.3), _sv(1, "sa", 0)]),
+        _gv(1, 4, 0, 0.9, [_sv(0, "fb", 2, 0.8), _sv(1, "sb", 0),
+                           _sv(2, "sc", 0)]),
+        _gv(2, 8, 1, 0.0, [_sv(0, "sd", 0)]),          # slow lane, 1 slot
+    ]
+    plans = QueueDepthPolicy(starve_s=0.05,
+                             max_migrations_per_tick=1).migrations(views)
+    assert plans == [Migration("sa", 0, 2, "evict-starved")]
+
+
+def test_policy_rescues_oldest_waiter_when_no_slow_lane():
+    """With no slow lane free, the policy moves the oldest-deadline WAITER
+    into an active group instead — the fast stream escapes the stall."""
+    views = [
+        _gv(0, 2, 0, 0.2, [_sv(0, "w1", 1, 0.40), _sv(1, "w2", 1, 0.90),
+                           _sv(2, "slow", 0)]),
+        _gv(1, 4, 1, 0.0, [_sv(0, "x", 1, 0.01), _sv(1, "y", 1, 0.02)]),
+    ]
+    plans = QueueDepthPolicy(starve_s=0.05).migrations(views)
+    assert plans == [Migration("w2", 0, 1, "rescue-waiter")]
+
+
+def test_policy_honors_freeze_budget_and_free_slots():
+    blocked = _gv(0, 2, 0, 0.2, [_sv(0, "fast", 2, 0.4), _sv(1, "slow", 0)])
+    lane = _gv(1, 4, 1, 0.0, [_sv(0, "crawl", 0)])
+
+    # Frozen victim (inside its post-migration cooldown): the evict branch
+    # has no candidate, and the only lane with room is itself starving —
+    # NOT a rescue target (moving the waiter next to "crawl" would trade
+    # one stall for another), so nobody moves until the cooldown expires.
+    plans = QueueDepthPolicy(starve_s=0.05).migrations(
+        [blocked, lane], frozen=frozenset({"slow"}))
+    assert plans == []
+
+    # With a clean lane open as well, the frozen blocker stays put and the
+    # waiter is rescued there instead.
+    clean = _gv(3, 4, 1, 0.0, [_sv(0, "x", 1, 0.01)])
+    plans = QueueDepthPolicy(starve_s=0.05).migrations(
+        [blocked, lane, clean], frozen=frozenset({"slow"}))
+    assert plans == [Migration("fast", 0, 3, "rescue-waiter")]
+
+    # Under starve_s, nobody moves yet.
+    assert QueueDepthPolicy(starve_s=10.0).migrations([blocked, lane]) == []
+
+    # Two blocked groups, one free slot: the second plan must not
+    # oversubscribe the lane (free-slot accounting inside the policy).
+    blocked2 = _gv(2, 2, 0, 0.3, [_sv(0, "f2", 1, 0.2), _sv(1, "s2", 0)])
+    plans = QueueDepthPolicy(starve_s=0.05,
+                             max_migrations_per_tick=4).migrations(
+        [blocked, blocked2, lane])
+    assert len(plans) == 2
+    # blocked2 stalled longer, so it gets the lane's one free slot; the
+    # other group's victim lands in the slot that eviction just vacated.
+    assert plans[0] == Migration("s2", 2, 1, "evict-starved")
+    assert plans[1].src == 0 and plans[1].dst == 2
+
+    # The per-tick budget caps admin work.
+    plans = QueueDepthPolicy(starve_s=0.05,
+                             max_migrations_per_tick=1).migrations(
+        [blocked, blocked2, lane])
+    assert len(plans) == 1
+
+
+# ---------------------------------------------------------------------------
+# integration: small ladder (widths (1, 2)), manual + policy migration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rig():
+    cfg = _cfg()
+    scenes = {name: _scene(name, i) for i, name in
+              enumerate(("room0", "stairs0", "desk0", "hall0"))}
+    return cfg, scenes
+
+
+def test_ladder_migration_parity_and_zero_recompile(rig):
+    """One stream steps, migrates S=1→S=2 mid-trajectory with frames still
+    queued (transplant, no drops), keeps stepping next to mid-migration
+    admissions/retirements on BOTH pools — and finishes bitwise-equal to
+    the unmigrated solo run, with zero recompiles after warmup and exactly
+    1.0 dispatches/frame-step per group in the registry."""
+    cfg, scenes = rig
+    ds_main, ds_other, ds_third = (scenes["room0"], scenes["stairs0"],
+                                   scenes["desk0"])
+    tele = Telemetry.on(trace=True)
+    ladder = PoolLadder(S.session_init(ds_main, cfg), widths=(1, 2),
+                        queue_depth=2, telemetry=tele)
+    baseline = ladder.warmup()
+    assert baseline["serve_step_entries"] >= 2     # both rungs pre-compiled
+    sched = SlamScheduler(ladder, telemetry=tele, reserve_slots=0)
+
+    # main lands on the narrowest rung (S=1) and steps twice there.
+    sched.admit("main", S.session_init(ds_main, cfg))
+    assert sched.placement("main") == (0, 0)
+    assert sched.offer("main", ds_main.frames[1])
+    assert sched.offer("main", ds_main.frames[2])
+    while ladder[0].server.queue.fill(0):
+        sched.tick()
+
+    # Mid-trajectory admission on the DESTINATION pool, then migrate main
+    # with a frame still queued — the transplant must not drop it.
+    sched.admit("other", S.session_init(ds_other, cfg))
+    assert sched.placement("other") == (1, 0)
+    assert sched.offer("main", ds_main.frames[3])
+    sched.migrate("main", 1)
+    assert sched.placement("main")[0] == 1
+    assert ladder[0].server.stats.frames_dropped == 0   # transplanted
+    assert ladder[1].server.queue.fill(sched.placement("main")[1]) == 1
+
+    # Mid-migration admission on the SOURCE pool (the slot main vacated),
+    # then retire it mid-stream too — churn on both ends.
+    sched.admit("third", S.session_init(ds_third, cfg))
+    assert sched.placement("third") == (0, 0)
+    assert sched.offer("third", ds_third.frames[1])
+    _drive(sched, {"main": [ds_main.frames[4]],
+                   "other": list(ds_other.frames[1:]),
+                   "third": list(ds_third.frames[2:3])},
+           close=("main", "other", "third"))
+    assert sorted(sched.finished()) == ["main", "other", "third"]
+    assert sched.stats.migrations == 1
+
+    # Zero recompiles across all of it (checked BEFORE the solo baselines
+    # below compile the solo-step executable).
+    assert compile_cache_stats() == baseline
+
+    # Per-group dispatches/frame-step == 1.0, measured from the registry.
+    for rung in ladder.rungs:
+        disp = tele.registry.sum_counters("dispatches", kind="step",
+                                          group=rung.name)
+        assert disp == rung.server.stats.steps == rung.pool.stats.dispatches
+    assert tele.registry.sum_counters("migrations") == 1
+    assert tele.registry.sum_counters("dispatches", kind="admin") == 4
+
+    # Bitwise parity: migrated main vs unmigrated solo, churn streams too.
+    assert _leaves_equal(sched.row("main"), _solo(ds_main, cfg))
+    assert _leaves_equal(sched.row("other"), _solo(ds_other, cfg))
+    assert _leaves_equal(sched.row("third"), _solo(ds_third, cfg, upto=3))
+
+    # The migrated stream's latency series followed it across pools.
+    lat = latency_summary(tele.registry, "frame_latency_ms", stream="main")
+    assert lat["count"] == 4 and lat["p50_ms"] <= lat["p99_ms"]
+
+
+def test_policy_driven_eviction_unblocks_waiters(rig):
+    """Starvation actually triggers the policy end-to-end: a fast stream
+    blocked behind a starving lockstep peer gets unblocked by the
+    scheduler evicting the starving row to a freed slot — and every
+    trajectory stays bitwise-correct."""
+    cfg, scenes = rig
+    ds_a, ds_b, ds_c = scenes["room0"], scenes["stairs0"], scenes["hall0"]
+    tele = Telemetry()
+    ladder = PoolLadder(S.session_init(ds_a, cfg), widths=(1, 2),
+                        queue_depth=2, telemetry=tele)
+    ladder.warmup()
+    sched = SlamScheduler(
+        ladder, policy=QueueDepthPolicy(starve_s=0.0, cooldown_s=0.0),
+        telemetry=tele, reserve_slots=0)
+
+    sched.admit("a", S.session_init(ds_a, cfg))     # → S1
+    sched.admit("b", S.session_init(ds_b, cfg))     # → S2
+    assert sched.offer("b", ds_b.frames[1])         # S2 clean: admissible
+    sched.admit("c", S.session_init(ds_c, cfg))     # → S2 (b's peer)
+    assert sched.placement("b")[0] == 1 and sched.placement("c")[0] == 1
+
+    # b has a frame, c starves: S2 is blocked, but S1 is full — no lane.
+    assert sched.tick() == 0
+    assert sched.stats.migrations == 0
+
+    # a finishes → S1 frees → next tick evicts starving c there and pumps
+    # the unblocked S2 in the same heartbeat.
+    sched.close("a")
+    assert sched.tick() == 1
+    assert sched.placement("c") == (0, 0)
+    assert sched.stats.migrations == 1 and sched.stats.completions == 1
+
+    _drive(sched, {"b": list(ds_b.frames[2:]), "c": list(ds_c.frames[1:])},
+           close=("b", "c"))
+    assert _leaves_equal(sched.row("a"), S.session_init(ds_a, cfg))
+    assert _leaves_equal(sched.row("b"), _solo(ds_b, cfg))
+    assert _leaves_equal(sched.row("c"), _solo(ds_c, cfg))
+
+
+def test_threaded_ingest_end_to_end(rig):
+    """The full v2 topology: producer-thread ingest (rate-limited slow
+    stream included) + dispatch-thread serve loop, admission overflow
+    waiting for slots, auto-retire handing slots over — every stream
+    bitwise-equal to its solo run."""
+    cfg, scenes = rig
+    tele = Telemetry()
+    ladder = PoolLadder(S.session_init(scenes["room0"], cfg), widths=(1, 2),
+                        queue_depth=2, telemetry=tele)
+    ladder.warmup()
+    sched = SlamScheduler(
+        ladder, policy=QueueDepthPolicy(starve_s=0.02, cooldown_s=0.05),
+        telemetry=tele, reserve_slots=1)
+
+    sids = list(scenes)                # 4 streams > 3 slots: one must wait
+    for i, name in enumerate(sids):
+        sched.admit(name, S.session_init(scenes[name], cfg))
+    worker = IngestWorker(
+        sched, {name: scenes[name].frames[1:] for name in sids},
+        period_s={"hall0": 0.05})      # one camera-rate-limited stream
+    worker.start()
+    try:
+        sched.serve(worker=worker, timeout_s=300)
+    finally:
+        worker.stop()
+    assert worker.error is None and worker.done.is_set()
+    assert worker.offered == 4 * 4
+    assert sorted(sched.finished()) == sorted(sids)
+    assert sched.stats.admits == 4 and sched.stats.completions == 4
+
+    for name in sids:
+        assert _leaves_equal(sched.row(name), _solo(scenes[name], cfg)), (
+            f"stream {name} diverged from its solo run")
+    for rung in ladder.rungs:
+        disp = tele.registry.sum_counters("dispatches", kind="step",
+                                          group=rung.name)
+        assert disp == rung.server.stats.steps == rung.pool.stats.dispatches
+        assert rung.server.stats.frames_dropped == 0
+
+
+def test_scheduler_admission_and_api_guards(rig):
+    cfg, scenes = rig
+    tele = Telemetry()
+    ladder = PoolLadder(S.session_init(scenes["room0"], cfg), widths=(1,),
+                        telemetry=tele)
+    sched = SlamScheduler(ladder, telemetry=tele, reserve_slots=1)
+    # reserve is clamped below capacity so a 1-wide ladder still admits.
+    sched.admit("a", S.session_init(scenes["room0"], cfg))
+    assert sched.placement("a") == (0, 0)
+    with pytest.raises(ValueError, match="already admitted"):
+        sched.admit("a", S.session_init(scenes["room0"], cfg))
+    with pytest.raises(KeyError):
+        sched.offer("ghost", scenes["room0"].frames[1])
+    with pytest.raises(PoolFull):
+        sched.migrate("a", 0)          # own rung has no second slot
+    sched.admit("b", S.session_init(scenes["stairs0"], cfg))
+    assert sched.placement("b") is None            # waits: no slot free
+    sched.close("a")
+    sched.close("b")
+    sched.serve(timeout_s=60)
+    # a auto-retired, b placed into the freed slot then finished empty.
+    assert sorted(sched.finished()) == ["a", "b"]
+    with pytest.raises(KeyError):                  # finished: no longer live
+        sched.offer("b", scenes["stairs0"].frames[1])
+
+
+# ---------------------------------------------------------------------------
+# the full ladder (slow): S=2 → 4 → 8 migration parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_full_ladder_migration_parity_s248():
+    """ISSUE acceptance verbatim: a stream migrated S=2→4→8 mid-trajectory
+    finishes bitwise-equal to an unmigrated solo run, with admissions and
+    retirements landing on the source and destination pools mid-migration,
+    and zero recompiles after warmup across all of it."""
+    cfg = _cfg()
+    ds_main = _scene("room0", 0)
+    ds_src = _scene("stairs0", 1)      # churn on the source pool
+    ds_dst = _scene("desk0", 2)        # churn on the destination pool
+    tele = Telemetry()
+    ladder = PoolLadder(S.session_init(ds_main, cfg), widths=(2, 4, 8),
+                        queue_depth=2, telemetry=tele)
+    baseline = ladder.warmup()
+    sched = SlamScheduler(ladder, telemetry=tele, reserve_slots=1)
+
+    sched.admit("main", S.session_init(ds_main, cfg))
+    assert sched.placement("main") == (0, 0)       # narrowest: S=2
+    assert sched.offer("main", ds_main.frames[1])
+    while sched.placement("main") and ladder[0].server.queue.fill(
+            sched.placement("main")[1]):
+        sched.tick()
+
+    # S=2 → S=4 with a frame in flight; admit churn onto the source rung.
+    assert sched.offer("main", ds_main.frames[2])
+    sched.migrate("main", 1)
+    sched.admit("src-churn", S.session_init(ds_src, cfg))
+    assert sched.placement("src-churn")[0] == 0
+    assert sched.offer("src-churn", ds_src.frames[1])
+    _drive(sched, {"main": [ds_main.frames[3]],
+                   "src-churn": [ds_src.frames[2]]}, close=("src-churn",))
+
+    # S=4 → S=8; admit + retire churn on the destination rung.
+    sched.admit("dst-churn", S.session_init(ds_dst, cfg))
+    sched.migrate("dst-churn", 2)
+    sched.migrate("main", 2)
+    assert sched.placement("main")[0] == 2
+    assert sched.offer("dst-churn", ds_dst.frames[1])
+    _drive(sched, {"main": [ds_main.frames[4]],
+                   "dst-churn": [ds_dst.frames[2]]},
+           close=("main", "dst-churn"))
+
+    assert sched.stats.migrations == 3
+    assert compile_cache_stats() == baseline, (
+        "serving after warmup must never compile")
+    for rung in ladder.rungs:
+        disp = tele.registry.sum_counters("dispatches", kind="step",
+                                          group=rung.name)
+        assert disp == rung.server.stats.steps == rung.pool.stats.dispatches
+
+    assert _leaves_equal(sched.row("main"), _solo(ds_main, cfg)), (
+        "migrated S=2→4→8 trajectory diverged from the unmigrated solo run")
+    assert _leaves_equal(sched.row("src-churn"), _solo(ds_src, cfg, upto=3))
+    assert _leaves_equal(sched.row("dst-churn"), _solo(ds_dst, cfg, upto=3))

@@ -22,6 +22,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import threading
 
 import jax
 import numpy as np
@@ -119,6 +120,67 @@ def test_frame_queue_telemetry_accounting():
     assert reg.gauge("queue_depth", slot=0).hwm == 2   # hwm survives the pops
 
 
+def test_frame_queue_take_load_and_head_age():
+    """The sched tier's queue-transplant primitives: ``take`` drains a
+    slot's raw entries with their ORIGINAL timestamps and flow ids,
+    ``load`` requeues them in order into an empty slot, and ``head_age_s``
+    exposes the oldest frame's wait (the policy's deadline signal)."""
+    q = FrameQueue(slots=2, depth=2)
+    assert q.head_age_s(0) is None                  # empty: no deadline
+    assert q.put(0, "a0") and q.put(0, "a1")
+    age = q.head_age_s(0)
+    assert age is not None and age >= 0.0
+    entries = q.take(0)
+    assert [e[0] for e in entries] == ["a0", "a1"]
+    assert q.fill(0) == 0 and q.head_age_s(0) is None
+
+    q2 = FrameQueue(slots=1, depth=2)
+    q2.load(0, entries)                             # transplant preserves order
+    assert q2.fill(0) == 2
+    frame, waited, fid = q2.pop(0)
+    assert frame == "a0" and fid == entries[0][2]
+    assert waited >= age                            # original timestamp rode along
+    with pytest.raises(ValueError, match="not empty"):
+        q2.load(0, entries)
+    with pytest.raises(ValueError, match="depth"):
+        FrameQueue(slots=1, depth=1).load(0, entries)
+
+
+def test_frame_queue_concurrent_producers_consumer():
+    """Producer-thread safety (the ingest-worker topology): one producer
+    thread per slot hammering ``put`` under backpressure while the main
+    thread consumes — no frame lost or duplicated, per-slot FIFO order
+    intact, every flow id unique."""
+    slots, n = 3, 200
+    q = FrameQueue(slots=slots, depth=4)
+
+    def produce(slot):
+        sent = 0
+        while sent < n:
+            if q.put(slot, (slot, sent)):
+                sent += 1
+
+    producers = [threading.Thread(target=produce, args=(s,), daemon=True)
+                 for s in range(slots)]
+    for t in producers:
+        t.start()
+    popped = {s: [] for s in range(slots)}
+    fids = []
+    while any(len(popped[s]) < n for s in range(slots)):
+        for s in range(slots):
+            if len(popped[s]) < n and q.fill(s):
+                frame, waited, fid = q.pop(s)
+                popped[s].append(frame)
+                fids.append(fid)
+                assert waited >= 0.0
+    for t in producers:
+        t.join(timeout=10.0)
+        assert not t.is_alive()
+    for s in range(slots):
+        assert popped[s] == [(s, i) for i in range(n)], f"slot {s} lost order"
+    assert len(set(fids)) == slots * n              # flow ids never collide
+
+
 # ---------------------------------------------------------------------------
 # D=1 sharded pool: bitwise == step_many, one dispatch per frame-step
 # ---------------------------------------------------------------------------
@@ -192,6 +254,58 @@ def test_server_backpressure_and_admission(duo):
     solo = S.session_init(ds_c, cfg)
     solo, _ = S.session_step(solo, ds_c.frames[1])
     assert _leaves_equal(pool.session(1), solo)
+
+
+def test_retire_drops_queued_frames_and_accounts_them(duo):
+    """Retiring a slot with frames still queued must clear the queue and
+    count the drops in ``ServeStats.frames_dropped`` — otherwise the next
+    admission would inherit a stranger's frames (regression guard; the
+    sched tier's migration path avoids the drop by ``take``-ing the
+    entries first)."""
+    cfg, scenes = duo
+    pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                       mesh=make_data_mesh(1))
+    srv = SlamServer(pool, queue_depth=2)
+    srv.submit(1, scenes[1].frames[1])
+    srv.submit(1, scenes[1].frames[2])
+    assert srv.queue.fill(1) == 2
+
+    retired = srv.retire(1)
+    assert retired.batch is None
+    assert srv.queue.fill(1) == 0                  # queue cleared
+    assert srv.stats.frames_dropped == 2           # ... and accounted
+    assert srv.stats.frames_in == 2
+    with pytest.raises(ValueError, match="not live"):
+        srv.offer(1, scenes[1].frames[3])
+
+    # The freed slot re-admits with an empty queue (no frame leaks into
+    # the new stream) and drop accounting is monotonic.
+    slot = srv.admit(S.session_init(scenes[1], cfg))
+    assert slot == 1 and srv.queue.fill(1) == 0
+    assert srv.stats.frames_dropped == 2
+
+
+def test_offer_is_nonblocking_and_never_dispatches(duo):
+    """``offer`` is the producer-thread ingest entry point: a full queue
+    returns False (counted as backpressure) WITHOUT pumping — device
+    dispatch stays on the dispatch thread — while ``submit`` under the
+    same pressure would have dispatched the ready lockstep batch."""
+    cfg, scenes = duo
+    pool = ShardedPool([S.session_init(ds, cfg) for ds in scenes],
+                       mesh=make_data_mesh(1))
+    srv = SlamServer(pool, queue_depth=2)
+    for t in (1, 2):
+        assert srv.offer(0, scenes[0].frames[t])
+        assert srv.offer(1, scenes[1].frames[t])
+    # Both queues at depth and every lockstep batch ready — submit would
+    # pump here; offer must refuse and leave the device untouched.
+    assert not srv.offer(0, scenes[0].frames[3])
+    assert srv.stats.backpressure_events == 1
+    assert srv.stats.steps == 0 and pool.stats.dispatches == 0
+    assert srv.stats.frames_in == 4
+    assert srv.pump() == 2                         # dispatcher catches up
+    srv.drain()
+    assert pool.stats.dispatches == 2
 
 
 def test_sharded_pool_validation(duo):
