@@ -21,6 +21,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_paged,
         bench_serve,
         bench_sessions,
         bench_slam_fps,
@@ -46,6 +47,7 @@ def main() -> None:
         # BENCH_slam.json it (re)writes
         "wsu": bench_wsu.run,
         "sparse": bench_sparse.run,
+        "paged": bench_paged.run,
         "sessions": bench_sessions.run,
         "serve": bench_serve.run,
         "serve_v2": bench_serve.run_v2,

@@ -31,7 +31,7 @@ import sys
 
 #: Rows amended into the report by their own bench modules; each must be
 #: individually stamped (the top-level stamp covers only bench_slam_fps).
-AMENDED_ROWS = ("wsu", "sparse", "sessions", "serve", "serve_v2")
+AMENDED_ROWS = ("wsu", "sparse", "paged", "sessions", "serve", "serve_v2")
 
 
 def _check_latency_summary(lat, where: str, errs: list) -> None:
@@ -65,7 +65,7 @@ def validate(report: dict) -> list:
         if key not in report:
             errs.append(
                 f"missing row: {key!r} (run `python -m benchmarks.run "
-                f"--only slam_fps,wsu,sparse,sessions,serve,serve_v2`)")
+                f"--only slam_fps,wsu,sparse,paged,sessions,serve,serve_v2`)")
             continue
         _check_stamp(report[key], key, errs)
 
@@ -98,7 +98,34 @@ def validate(report: dict) -> list:
                 errs.append(f"serve.rows.{dkey}.queue_depth_hwm: expected "
                             f"int >= 1, got {row.get('queue_depth_hwm')!r}")
     _check_serve_v2(report.get("serve_v2"), errs)
+    _check_paged(report.get("paged"), errs)
     return errs
+
+
+def _check_paged(row, errs: list) -> None:
+    """The PagedMap row's gates (PR 10): the bounded working set, a real
+    late-trajectory fragment-build reduction, and the serving invariant."""
+    if not isinstance(row, dict):
+        return                      # absence is reported via AMENDED_ROWS
+    c = row.get("corridor0")
+    if not isinstance(c, dict):
+        errs.append("paged.corridor0: missing scene row")
+        return
+    frac = c.get("working_set_fraction")
+    if not isinstance(frac, (int, float)) or not 0 < frac < 1:
+        errs.append(f"paged.corridor0.working_set_fraction: expected a "
+                    f"fraction in (0, 1), got {frac!r}")
+    red = c.get("late_frag_build_reduction")
+    if not isinstance(red, (int, float)) or red < 1.6:
+        errs.append(f"paged.corridor0.late_frag_build_reduction: expected "
+                    f">= 1.6x, got {red!r}")
+    delta = c.get("psnr_delta_db")
+    if not isinstance(delta, (int, float)) or delta > 0.35:
+        errs.append(f"paged.corridor0.psnr_delta_db: expected <= 0.35 dB, "
+                    f"got {delta!r}")
+    if c.get("dispatches_per_frame_step") != 1.0:
+        errs.append("paged.corridor0.dispatches_per_frame_step != 1.0 "
+                    f"({c.get('dispatches_per_frame_step')!r})")
 
 
 def _check_serve_v2(v2, errs: list) -> None:

@@ -108,6 +108,30 @@ def init_state(g: GaussianField, num_tiles: int, cfg: PruneConfig) -> PruneState
     )
 
 
+#: The (N,)-shaped per-Gaussian leaves of :class:`PruneState`.  Everything
+#: else is a scalar or the (T,) ``prev_tile_count`` and rides through a
+#: paged-view gather/scatter untouched.
+ROW_FIELDS = ("score", "masked", "grad_ema", "age", "stable")
+
+
+def gather_rows(state: PruneState, idx: jnp.ndarray) -> PruneState:
+    """Row-gather the per-Gaussian leaves onto a paged view: ``idx`` is the
+    (M,) storage-row index per view row.  Scalars and ``prev_tile_count``
+    pass through (they are map-global, not per-row)."""
+    return state._replace(**{f: getattr(state, f)[idx] for f in ROW_FIELDS})
+
+
+def scatter_rows(full: PruneState, view: PruneState,
+                 idx: jnp.ndarray) -> PruneState:
+    """Scatter a paged view's per-Gaussian leaves back into full storage and
+    take every map-global leaf (scalars + ``prev_tile_count``) from the
+    view — the view is where the step ran, so its clocks/baselines are the
+    current ones."""
+    out = {f: getattr(full, f).at[idx].set(getattr(view, f))
+           for f in ROW_FIELDS}
+    return view._replace(**out)
+
+
 def importance_scores(param_grads: dict, cfg: PruneConfig) -> jnp.ndarray:
     """Eq. 7 from the gradients tracking BP already produced."""
     g_mu = jnp.linalg.norm(param_grads["mu"], axis=-1)

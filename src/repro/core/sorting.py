@@ -130,6 +130,18 @@ def count_skipped_fragments(
     return jnp.sum(jnp.where(dropped, area, 0))
 
 
+def remap_fragment_rows(frags: FragmentLists, view_idx: jnp.ndarray) -> FragmentLists:
+    """Translate fragment lists built over a paged *view* (rows 0..M-1) into
+    storage-row indices: ``view_idx`` is the (M,) storage row behind each
+    view row.  ``-1`` padding is preserved; counts/overflow/total are
+    index-free and pass through.  When the view is the identity gather
+    (every page visible, ascending), this is a no-op bitwise."""
+    idx = frags.idx
+    safe = jnp.maximum(idx, 0)
+    return frags._replace(idx=jnp.where(idx >= 0, view_idx[safe], -1)
+                          .astype(jnp.int32))
+
+
 def stack_fragment_lists(lists: list["FragmentLists"]) -> FragmentLists:
     """Stack per-keyframe fragment lists along a new leading axis so the
     mapping scan can carry the whole window cache as one pytree

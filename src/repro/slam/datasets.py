@@ -151,10 +151,72 @@ def _stairs_points(key, n: int):
     return pts + noise, jnp.clip(cols, 0.02, 0.98)
 
 
+def _corridor_points(key, n: int):
+    """'corridor0': a long straight corridor (z in [1, 13]) of repeated
+    geometry — floor, two side walls, and a pillar pair every ~2m.  The
+    camera *translates through* it (see ``_trajectory``), so early geometry
+    leaves the frustum permanently: at any time only a short z-slice of the
+    map is visible.  This is the PagedMap workload — a flat map sweeps all
+    of it every fragment build, a paged map only the visible pages."""
+    ks = jax.random.split(key, 6)
+    z0, z1 = 1.0, 13.0
+    n_floor = n // 4
+    n_wall = n // 4
+    n_pillar = n - n_floor - 2 * n_wall
+
+    # Floor (y = 1.5), z-striped so repeated sections stay distinguishable.
+    xz = jax.random.uniform(ks[0], (n_floor, 2),
+                            minval=jnp.array([-1.5, z0]),
+                            maxval=jnp.array([1.5, z1]))
+    floor = jnp.stack([xz[:, 0], jnp.full((n_floor,), 1.5), xz[:, 1]], -1)
+    fstripe = (jnp.floor(xz[:, 1] * 1.5) % 2)
+    floor_col = jnp.stack([0.3 + 0.2 * fstripe,
+                           jnp.full((n_floor,), 0.32),
+                           0.25 + 0.1 * (xz[:, 1] - z0) / (z1 - z0)], -1)
+
+    # Side walls (x = +/-1.5), checkered in (y, z).
+    def wall(k, x_side):
+        yz = jax.random.uniform(k, (n_wall, 2),
+                                minval=jnp.array([-0.6, z0]),
+                                maxval=jnp.array([1.5, z1]))
+        p = jnp.stack([jnp.full((n_wall,), x_side), yz[:, 0], yz[:, 1]], -1)
+        check = ((jnp.floor(yz[:, 0] * 2) + jnp.floor(yz[:, 1] * 1.2)) % 2)
+        col = jnp.stack([0.25 + 0.5 * check,
+                         0.35 + 0.15 * check,
+                         0.7 - 0.4 * check * (0.5 + x_side / 3.0)], -1)
+        return p, col
+
+    wl, wl_col = wall(ks[1], -1.5)
+    wr, wr_col = wall(ks[2], 1.5)
+
+    # Pillar pairs every 2m — the repeated landmark structure.
+    n_pairs = 6
+    per = n_pillar // n_pairs
+    pil_parts, pil_cols = [], []
+    for i in range(n_pairs):
+        m = n_pillar - per * (n_pairs - 1) if i == 0 else per
+        kk = jax.random.fold_in(ks[3], i)
+        u = jax.random.normal(kk, (m, 3)) * jnp.array([0.12, 0.45, 0.12])
+        side = 1.0 if i % 2 == 0 else -1.0
+        center = jnp.array([side * 1.0, 0.7, z0 + 1.0 + 2.0 * i])
+        p = u + center
+        hue = i / max(n_pairs - 1, 1)
+        col = jnp.stack([jnp.full((m,), 0.85 - 0.5 * hue),
+                         jnp.full((m,), 0.3 + 0.5 * hue),
+                         jnp.full((m,), 0.35)], -1)
+        pil_parts.append(p)
+        pil_cols.append(col)
+
+    pts = jnp.concatenate([floor, wl, wr] + pil_parts, axis=0)
+    cols = jnp.concatenate([floor_col, wl_col, wr_col] + pil_cols, axis=0)
+    noise = 0.008 * jax.random.normal(ks[4], pts.shape)
+    return pts + noise, jnp.clip(cols, 0.02, 0.98)
+
+
 # Registered synthetic scenes (mirrors the raster backend registry's error
 # style: unknown names raise listing what exists instead of a bare KeyError
 # or a silent fallback to room0's geometry).
-SCENES: tuple = ("room0", "room1", "hall0", "desk0", "stairs0")
+SCENES: tuple = ("room0", "room1", "hall0", "desk0", "stairs0", "corridor0")
 
 
 def registered_scenes() -> tuple:
@@ -167,6 +229,8 @@ def _surface_points(key, name: str, n: int):
         return _desk_points(key, n)
     if name.startswith("stairs"):
         return _stairs_points(key, n)
+    if name.startswith("corridor"):
+        return _corridor_points(key, n)
     ks = jax.random.split(key, 8)
     quarters = n // 4
 
@@ -211,9 +275,26 @@ def _surface_points(key, name: str, n: int):
 
 
 def _trajectory(name: str, num_frames: int):
-    """Smooth arc orbiting the scene center, with mild vertical bobbing."""
+    """Smooth arc orbiting the scene center, with mild vertical bobbing.
+    'corridor0' instead translates straight down the corridor (z 0 -> 4,
+    looking ahead): geometry behind the camera leaves the frustum for good,
+    which is what makes its late-trajectory visible set small."""
     ts = np.linspace(0.0, 1.0, num_frames)
     poses = []
+    if name.startswith("corridor"):
+        for t in ts:
+            # Ease-in (z ~ t^2): the per-frame step grows from ~0 to its
+            # maximum, so the constant-velocity motion model can bootstrap
+            # — the tracker only ever corrects the step-to-step residual,
+            # never an absolute 0.7 m jump from a standing start.
+            z = 4.0 * t * t
+            eye = np.array([0.2 * np.sin(3.0 * t), 0.45 + 0.05 * np.sin(5.0 * t), z])
+            target = np.array([0.1 * np.sin(3.0 * t + 0.5), 0.6, z + 3.0])
+            w2c = look_at(jnp.asarray(eye, jnp.float32),
+                          jnp.asarray(target, jnp.float32),
+                          jnp.asarray([0.0, -1.0, 0.0], jnp.float32))
+            poses.append(np.asarray(w2c))
+        return poses
     for t in ts:
         ang = (t - 0.5) * {"room0": 0.9, "room1": 1.2, "hall0": 0.7}.get(name, 0.9)
         eye = np.array([1.4 * np.sin(ang), 0.25 * np.sin(2.2 * ang), 0.9 - 0.9 * np.cos(ang)])

@@ -389,6 +389,11 @@ class _Stage:
         # WSU previous-iteration reuse: one schedule for the whole phase
         # (frags is fixed here), computed on device inside this dispatch.
         sched = self._sched_core(frags) if self.scheduled else None
+        # The caller-built pre-track fragment lists swept every row of g —
+        # in paged mode g is the visible view, so this counter is what the
+        # PagedMap bench compares against the flat path's full-map sweeps.
+        work = work._replace(frag_build_rows=work.frag_build_rows
+                             + jnp.asarray(g.mu.shape[0], jnp.int32))
 
         def body(carry, _):
             xi, ostate, work = carry
@@ -412,6 +417,10 @@ class _Stage:
                           frags, work):
         prune_cfg = self.cfg.prune
         sched0 = self._sched_core(frags) if self.scheduled else None
+        n_rows = jnp.asarray(g.mu.shape[0], jnp.int32)
+        # Pre-track build by the caller, plus one rebuild per fired pruning
+        # interval inside the scan body below.
+        work = work._replace(frag_build_rows=work.frag_build_rows + n_rows)
 
         def body(carry, _):
             if self.scheduled:
@@ -436,6 +445,8 @@ class _Stage:
 
             pstate, g, frags, fired = pruning.cond_interval_update(
                 pstate, g, frags, build_fn, prune_cfg)
+            work = work._replace(frag_build_rows=work.frag_build_rows
+                                 + jnp.where(fired, n_rows, 0))
             if self.scheduled:
                 # Re-schedule exactly when the lists rebuilt (same boundary).
                 sched = jax.lax.cond(fired, lambda fr, _s: self._sched_core(fr),
@@ -501,6 +512,15 @@ class _Stage:
         # WSU: one schedule per window slot, carried with the cache and
         # rebuilt on the same stride boundaries.
         scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
+        # Fragment-build row sweeps this phase: the W window builds, the
+        # stride rebuilds (a static count — the cond fires iff
+        # (it+1) % stride == 0) and the final eval render's internal build.
+        # The one-off sparse stable-background builds are excluded so the
+        # all-unstable sparse path stays bitwise-equal to the dense oracle.
+        builds = w_len + self.cfg.iters_map // stride + 1
+        work = work._replace(
+            frag_build_rows=work.frag_build_rows
+            + jnp.asarray(builds * g.mu.shape[0], jnp.int32))
 
         def body(carry, it):
             g, opt_state, cache, scheds, skipped_w, work = carry
@@ -585,6 +605,13 @@ class _Stage:
                 fragments=work.fragments + jnp.sum(bg_total * valid_i),
                 sched_programs=work.sched_programs + jnp.sum(bg_progs * valid_i))
         scheds = jax.vmap(self._sched_core)(cache) if self.scheduled else None
+        # Valid-only build accounting (invalid ring slots build padded lists
+        # but are excluded, mirroring the other counters): V window builds +
+        # static stride rebuilds + the final eval render's internal build.
+        work = work._replace(
+            frag_build_rows=work.frag_build_rows
+            + (n_valid + self.cfg.iters_map // stride + 1)
+            * jnp.asarray(g.mu.shape[0], jnp.int32))
 
         def body(carry, it):
             g, opt_state, cache, scheds, skipped_w, work = carry
@@ -747,7 +774,9 @@ class StepEngine:
             fired.append(did_fire)
         work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
                           iterations=it_n, unstable_gaussians=0,
-                          sched_programs=0, skipped_fragments=0)
+                          sched_programs=0, skipped_fragments=0,
+                          densify_dropped=0,
+                          frag_build_rows=(1 + sum(fired)) * g.capacity)
         return TrackResult(xi=xi, g=g, pstate=pstate, work=work,
                            losses=jnp.stack(losses), fired=np.asarray(fired))
 
@@ -839,7 +868,9 @@ class StepEngine:
                 builds += 1
         work = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
                           iterations=it_n, unstable_gaussians=un,
-                          sched_programs=pr, skipped_fragments=sk_n)
+                          sched_programs=pr, skipped_fragments=sk_n,
+                          densify_dropped=0,
+                          frag_build_rows=(builds + 1) * g.capacity)
         image = self._call(st.render_eval, g, masked, kf_w2c[-1])
         return MapResult(g=g, opt_state=opt_state, work=work,
                          losses=jnp.stack(losses), builds=builds, image=image)
@@ -860,7 +891,8 @@ class StepEngine:
         work = DeviceWork(fragments=0, pixels=track_px * cfg.iters_track,
                           gaussians_iters=0, iterations=cfg.iters_track,
                           unstable_gaussians=0, sched_programs=0,
-                          skipped_fragments=0)
+                          skipped_fragments=0, densify_dropped=0,
+                          frag_build_rows=0)
         if cfg.fused:
             xi = self._call(self._geo, base, pts_w, cols, valid, rgb, depth)
             return xi, work

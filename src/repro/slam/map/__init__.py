@@ -1,0 +1,22 @@
+"""PagedMap — spatially-paged Gaussian storage with frustum-culled views.
+
+See :mod:`repro.slam.map.paged` for the subsystem; this package re-exports
+its public surface so consumers write ``from repro.slam.map import ...``.
+"""
+
+from repro.slam.map.paged import (  # noqa: F401
+    PAGE_LADDER,
+    PageTable,
+    PagedConfig,
+    build_page_table,
+    frustum_planes,
+    gather_field,
+    ladder_page_capacity,
+    num_pages,
+    page_distances,
+    pages_visible,
+    scatter_field,
+    select_pages,
+    validate_paged,
+    view_rows,
+)

@@ -1,0 +1,295 @@
+"""PagedMap — spatially-bucketed Gaussian storage + frustum-culled views.
+
+The flat session map is one fixed-capacity ``GaussianField``; every frame's
+fragment build sweeps all N rows even when the camera can only see a corner
+of the map — the long-trajectory failure mode RTGS's redundancy-reduction
+thesis (and "No Redundancy, No Stall"'s streaming storage) eliminates.
+
+This module keeps the flat storage **untouched** and overlays a page
+structure on top of it:
+
+* every storage row (alive or dead) belongs to exactly one of ``P = N / C``
+  **pages** of fixed capacity ``C`` (``PagedConfig.page_capacity``, drawn
+  from the static :data:`PAGE_LADDER`);
+* pages are *spatial*: :func:`build_page_table` Morton-orders the alive
+  rows by quantized position and chunks the order into pages, so a page's
+  members share a locale and its AABB (``lo``/``hi`` over alive member
+  positions) is tight.  Dead rows sort behind every alive row, so the
+  emptiest pages — the **nursery** — are where densification headroom
+  concentrates;
+* per frame, :func:`pages_visible` frustum-tests each page AABB (p-vertex
+  against the five world-space frustum half-spaces of the tracking camera
+  and every keyframe in the mapping window) and :func:`select_pages` picks
+  EXACTLY ``V_max`` pages — the visible ones first, then nursery pages to
+  fill the quota (insertion headroom for densify's page spill).  The
+  selected page ids are re-sorted ascending, so when every page is selected
+  the gather below is the identity permutation — the bitwise-parity anchor;
+* :func:`view_rows` turns the selection into a dense (M = V_max * C,) list
+  of storage rows; the session gathers Gaussians/PruneState/Adam moments
+  onto that **view**, runs the unchanged flat frame step on it (the engine
+  stages are shape-polymorphic), and scatters the view back.  Fragment
+  build, scheduling, densify and prune therefore cost O(visible map), not
+  O(total map).
+
+Everything is pure jnp with static shapes — the cull/select/gather runs
+*inside* the session's single fused dispatch, preserving the
+1.0-dispatches-per-frame-step serving invariant.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import Intrinsics
+from repro.core.gaussians import GaussianField
+
+#: Static page-capacity ladder (rows per page).  Mirrors the sched tier's
+#: pool-width ladder: a fixed menu keeps every (capacity, page_capacity)
+#: pair a static compile-cache key instead of a free parameter.
+PAGE_LADDER = (32, 64, 128, 256, 512, 1024)
+
+#: Morton quantization: 10 bits per axis, fixed world origin at
+#: ``-(2**9) * cell`` so the key is data-independent (rebuilds of an
+#: unchanged map produce the identical table).
+_MORTON_BITS = 10
+_MORTON_SPAN = 1 << _MORTON_BITS
+#: Sort key for dead rows: above every 30-bit alive Morton key, so dead
+#: rows chunk into the trailing (nursery) pages.
+_DEAD_KEY = 1 << (3 * _MORTON_BITS)
+
+
+class PagedConfig(NamedTuple):
+    """Static knobs of the paged map (a NamedTuple so it rides
+    ``SLAMConfig`` into the session's static compile-cache fingerprint)."""
+
+    page_capacity: int = 128     # rows per page (C) — from PAGE_LADDER
+    visible_pages: int = 8       # pages per view (V_max); M = V_max * C
+    cell: float = 0.25           # Morton quantization cell (world units)
+    margin: float = 0.5          # frustum slack (world units): pages near
+    #                              the boundary stay in view so Gaussians
+    #                              straddling a page edge keep rendering
+
+
+class PageTable(NamedTuple):
+    """The page overlay of one session's flat storage (registered pytree —
+    it rides the ``SlamSession`` carry through the fused scan)."""
+
+    row2page: jnp.ndarray   # (N,) int32 — owning page of every storage row
+    lo: jnp.ndarray         # (P, 3) f32 AABB min over alive members (+inf
+    #                         when the page holds no alive row)
+    hi: jnp.ndarray         # (P, 3) f32 AABB max over alive members (-inf)
+    occupancy: jnp.ndarray  # (P,) int32 alive members per page
+
+
+def num_pages(capacity: int, pcfg: PagedConfig) -> int:
+    return capacity // pcfg.page_capacity
+
+
+def validate_paged(pcfg: PagedConfig, capacity: int) -> None:
+    if pcfg.page_capacity not in PAGE_LADDER:
+        raise ValueError(
+            f"page_capacity {pcfg.page_capacity} is not on the static "
+            f"ladder {PAGE_LADDER}")
+    if capacity % pcfg.page_capacity != 0:
+        raise ValueError(
+            f"capacity {capacity} must be a multiple of page_capacity "
+            f"{pcfg.page_capacity} (pages are fixed-size)")
+    p = num_pages(capacity, pcfg)
+    if not (1 <= pcfg.visible_pages <= p):
+        raise ValueError(
+            f"visible_pages {pcfg.visible_pages} must be in [1, {p}] "
+            f"(= capacity {capacity} / page_capacity {pcfg.page_capacity})")
+
+
+def ladder_page_capacity(capacity: int, min_pages: int = 4) -> int:
+    """The largest :data:`PAGE_LADDER` rung that divides ``capacity`` into
+    at least ``min_pages`` pages — the default page size for a session that
+    enables paging without picking a rung by hand."""
+    for rung in sorted(PAGE_LADDER, reverse=True):
+        if capacity % rung == 0 and capacity // rung >= min_pages:
+            return rung
+    for rung in sorted(PAGE_LADDER, reverse=True):
+        if capacity % rung == 0:
+            return rung
+    raise ValueError(
+        f"no PAGE_LADDER rung {PAGE_LADDER} divides capacity {capacity}")
+
+
+# ---------------------------------------------------------------------------
+# page-table (re)build: Morton order -> fixed-size chunks
+# ---------------------------------------------------------------------------
+
+
+def _part1by2(x: jnp.ndarray) -> jnp.ndarray:
+    """Spread a 10-bit int across every third bit (Morton interleave)."""
+    x = x & (_MORTON_SPAN - 1)
+    x = (x | (x << 16)) & 0x030000FF
+    x = (x | (x << 8)) & 0x0300F00F
+    x = (x | (x << 4)) & 0x030C30C3
+    x = (x | (x << 2)) & 0x09249249
+    return x
+
+
+def morton_keys(mu: jnp.ndarray, cell: float) -> jnp.ndarray:
+    """(N,) int32 30-bit Morton keys of positions quantized to ``cell``
+    (fixed origin, so an unchanged map keys identically every rebuild)."""
+    q = jnp.floor(mu / cell).astype(jnp.int32) + (_MORTON_SPAN // 2)
+    q = jnp.clip(q, 0, _MORTON_SPAN - 1)
+    return (_part1by2(q[:, 0])
+            | (_part1by2(q[:, 1]) << 1)
+            | (_part1by2(q[:, 2]) << 2))
+
+
+def build_page_table(g: GaussianField, pcfg: PagedConfig) -> PageTable:
+    """Assign every storage row to a page and compute page metadata.
+
+    Alive rows sort by Morton key (spatial locality), dead rows sort last
+    (nursery); the stable sorted order chunks into ``P`` pages of exactly
+    ``C`` rows.  Storage itself never moves — the table is an index
+    overlay, so rebuilding it costs one argsort and never perturbs any
+    consumer's bits.  Pure jnp: safe inside the fused session step (the
+    session rebuilds under ``lax.cond`` on keyframes, after densify)."""
+    n = g.capacity
+    c = pcfg.page_capacity
+    key = jnp.where(g.alive, morton_keys(g.mu, pcfg.cell), _DEAD_KEY)
+    order = jnp.argsort(key)            # stable (jnp default): ties keep row order
+    row2page = jnp.zeros((n,), jnp.int32).at[order].set(
+        (jnp.arange(n, dtype=jnp.int32) // c))
+    p = n // c
+    alive3 = g.alive[:, None]
+    lo = jax.ops.segment_min(jnp.where(alive3, g.mu, jnp.inf), row2page,
+                             num_segments=p)
+    hi = jax.ops.segment_max(jnp.where(alive3, g.mu, -jnp.inf), row2page,
+                             num_segments=p)
+    occ = jax.ops.segment_sum(g.alive.astype(jnp.int32), row2page,
+                              num_segments=p)
+    return PageTable(row2page=row2page, lo=lo, hi=hi, occupancy=occ)
+
+
+# ---------------------------------------------------------------------------
+# frustum cull: page AABB vs camera frustum half-spaces
+# ---------------------------------------------------------------------------
+
+
+def frustum_planes(intr: Intrinsics, w2c: jnp.ndarray,
+                   near: float = 0.05) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """World-space inward half-spaces of a pinhole frustum.
+
+    Returns ``(m, b)`` with ``m`` (5, 3) and ``b`` (5,) such that a world
+    point ``x`` is inside the frustum iff ``m @ x >= b`` for all five
+    planes (near, left, right, top, bottom; no far plane — SLAM maps are
+    depth-unbounded).  Derivation: with ``x_c = R x_w + t`` a camera-space
+    half-space ``n . x_c >= d`` becomes ``(R^T n) . x_w >= d - n . t``;
+    the image-edge planes come from the projection inequalities
+    ``0 <= fx x/z + cx <= W`` (and the y analogue) cleared of the positive
+    ``z`` denominator."""
+    r = w2c[:3, :3]
+    t = w2c[:3, 3]
+    n_cam = jnp.asarray(
+        [[0.0, 0.0, 1.0],                        # near:   z >= near
+         [intr.fx, 0.0, intr.cx],                # left:   fx x + cx z >= 0
+         [-intr.fx, 0.0, intr.width - intr.cx],  # right
+         [0.0, intr.fy, intr.cy],                # top
+         [0.0, -intr.fy, intr.height - intr.cy]],  # bottom
+        jnp.float32)
+    d = jnp.asarray([near, 0.0, 0.0, 0.0, 0.0], jnp.float32)
+    m = n_cam @ r                       # (5,3): rows are R^T n
+    b = d - n_cam @ t
+    return m, b
+
+
+def pages_visible(table: PageTable, intr: Intrinsics, w2cs: jnp.ndarray,
+                  near: float = 0.05, margin: float = 0.5) -> jnp.ndarray:
+    """(P,) bool — pages whose AABB intersects ANY of the given frusta.
+
+    ``w2cs`` is (B, 4, 4) — the tracking camera plus every keyframe pose
+    the mapping window might render.  Standard p-vertex test per plane:
+    the AABB corner furthest along the plane normal decides.  Empty pages
+    (no alive member; ``lo``/``hi`` are +/-inf sentinels) are culled
+    outright via the explicit occupancy gate — which also keeps the
+    0 * inf NaNs their sentinel corners would produce out of the result."""
+    def one(w2c):
+        m, b = frustum_planes(intr, w2c, near=near)     # (5,3), (5,)
+        v = jnp.where(m[:, None, :] > 0, table.hi[None, :, :],
+                      table.lo[None, :, :])              # (5,P,3) p-vertex
+        dots = jnp.sum(m[:, None, :] * v, axis=-1)       # (5,P)
+        return jnp.all(dots >= (b[:, None] - margin), axis=0)
+
+    vis = jnp.any(jax.vmap(one)(w2cs), axis=0)
+    return vis & (table.occupancy > 0)
+
+
+# ---------------------------------------------------------------------------
+# selection + view gather/scatter
+# ---------------------------------------------------------------------------
+
+
+def select_pages(visible: jnp.ndarray, occupancy: jnp.ndarray,
+                 v_max: int, priority: jnp.ndarray | None = None
+                 ) -> jnp.ndarray:
+    """(V_max,) int32 **ascending** page ids of the frame's working set.
+
+    Priority: visible pages first, then nursery fill — the least-occupied
+    non-visible pages (densify's insertion headroom; a full page "spills"
+    into the fresh page the nursery quota guarantees is in view).  When
+    more pages are visible than ``v_max`` (the paper's bounded working
+    set), the keepers are the lowest-``priority`` visible pages — pass the
+    camera-to-page distance so the dropped pages are the far ones whose
+    Gaussians project near the vanishing point; with ``priority=None`` the
+    tie-break is page id (drop the highest ids).
+
+    The ascending re-sort is what makes the all-visible case the identity
+    gather: whatever the priority, when every page is selected
+    ``view_rows`` enumerates storage rows 0..N-1 in order, so the paged
+    step is bitwise the flat step."""
+    p = visible.shape[0]
+    ids = jnp.arange(p, dtype=jnp.int32)
+    if priority is None:
+        rank = ids
+    else:
+        rank = jnp.argsort(jnp.argsort(priority)).astype(jnp.int32)
+    key = jnp.where(visible, rank, p + occupancy.astype(jnp.int32) * p + ids)
+    return jnp.sort(jnp.argsort(key)[:v_max]).astype(jnp.int32)
+
+
+def page_distances(table: PageTable, w2c: jnp.ndarray) -> jnp.ndarray:
+    """(P,) f32 squared camera-to-AABB distance per page (0 inside the
+    box; inf for empty pages) — the ``select_pages`` priority that keeps
+    the near field when the visible set exceeds the working-set quota."""
+    rot, t = w2c[:3, :3], w2c[:3, 3]
+    eye = -rot.T @ t
+    nearest = jnp.clip(eye[None, :], table.lo, table.hi)
+    d2 = jnp.sum((nearest - eye[None, :]) ** 2, axis=-1)
+    return jnp.where(table.occupancy > 0, d2, jnp.inf)
+
+
+def view_rows(row2page: jnp.ndarray, selected: jnp.ndarray,
+              page_capacity: int) -> jnp.ndarray:
+    """(M,) int32 storage rows behind the view, M = len(selected) * C.
+
+    Every selected page contributes exactly ``C`` rows (pages are
+    fixed-size by construction), so the view is dense — no padding mask
+    for downstream stages to thread.  Rows appear in ascending storage
+    order, which for an all-pages selection is ``arange(N)``."""
+    n = row2page.shape[0]
+    m = selected.shape[0] * page_capacity
+    sel = jnp.zeros((n // page_capacity,), bool).at[selected].set(True)
+    member = sel[row2page]
+    rank = jnp.cumsum(member.astype(jnp.int32)) - 1
+    rows = jnp.full((m,), -1, jnp.int32)
+    return rows.at[jnp.where(member, rank, m)].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+
+
+def gather_field(g: GaussianField, idx: jnp.ndarray) -> GaussianField:
+    """Row-gather a ``GaussianField`` onto a view (all leaves are (N, ...))."""
+    return jax.tree.map(lambda leaf: leaf[idx], g)
+
+
+def scatter_field(full: GaussianField, view: GaussianField,
+                  idx: jnp.ndarray) -> GaussianField:
+    """Scatter a view's rows back into full storage."""
+    return jax.tree.map(lambda f, v: f.at[idx].set(v), full, view)

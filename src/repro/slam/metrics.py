@@ -48,13 +48,18 @@ class DeviceWork(NamedTuple):
     unstable_gaussians: jnp.ndarray  # optimized Gaussians x mapping iters
     sched_programs: jnp.ndarray      # mapping subtile programs (chunk trips)
     skipped_fragments: jnp.ndarray   # fragments dropped by the stable mask
+    densify_dropped: jnp.ndarray     # new Gaussians dropped: storage full
+    frag_build_rows: jnp.ndarray     # rows swept by fragment-list builds
+    #                                  (paged mode sweeps the visible view,
+    #                                   not the whole map)
 
 
 def device_work_zero() -> DeviceWork:
     z = jnp.zeros((), jnp.int32)
     return DeviceWork(fragments=z, pixels=z, gaussians_iters=z, iterations=z,
                       unstable_gaussians=z, sched_programs=z,
-                      skipped_fragments=z)
+                      skipped_fragments=z, densify_dropped=z,
+                      frag_build_rows=z)
 
 
 def device_work_add(w: DeviceWork, fragments, pixels, alive,
@@ -73,6 +78,8 @@ def device_work_add(w: DeviceWork, fragments, pixels, alive,
         unstable_gaussians=w.unstable_gaussians + jnp.asarray(unstable, jnp.int32),
         sched_programs=w.sched_programs + jnp.asarray(programs, jnp.int32),
         skipped_fragments=w.skipped_fragments + jnp.asarray(skipped, jnp.int32),
+        densify_dropped=w.densify_dropped,
+        frag_build_rows=w.frag_build_rows,
     )
 
 
@@ -192,6 +199,8 @@ class WorkCounters:
     #                              (sparse_opt reduces)
     sched_programs: int = 0      # mapping subtile programs (chunk trips)
     skipped_fragments: int = 0   # fragments dropped by the stable mask
+    densify_dropped: int = 0     # new Gaussians dropped: storage full
+    frag_build_rows: int = 0     # rows swept by fragment-list builds
 
     def add(self, fragments: int, pixels: int, alive: int):
         self.fragments += int(fragments)
@@ -209,6 +218,8 @@ class WorkCounters:
         self.unstable_gaussians += int(dev.unstable_gaussians)
         self.sched_programs += int(dev.sched_programs)
         self.skipped_fragments += int(dev.skipped_fragments)
+        self.densify_dropped += int(dev.densify_dropped)
+        self.frag_build_rows += int(dev.frag_build_rows)
 
     def merged_with(self, other: "WorkCounters") -> "WorkCounters":
         return WorkCounters(
@@ -220,4 +231,6 @@ class WorkCounters:
             unstable_gaussians=self.unstable_gaussians + other.unstable_gaussians,
             sched_programs=self.sched_programs + other.sched_programs,
             skipped_fragments=self.skipped_fragments + other.skipped_fragments,
+            densify_dropped=self.densify_dropped + other.densify_dropped,
+            frag_build_rows=self.frag_build_rows + other.frag_build_rows,
         )

@@ -248,6 +248,34 @@ class ShardedPool:
         return session_finalize(self.session(slot), gt_w2c=gt_w2c,
                                 stats=self.stats, **kw)
 
+    def memory_profile(self) -> dict:
+        """Static per-row memory shape of this pool — the PagedMap serving
+        story in numbers.  ``storage_rows`` is each row's full Gaussian
+        pool; ``working_rows`` is the rows a frame-step actually optimizes
+        (the frustum-culled view when ``cfg.paged`` is set, the whole pool
+        otherwise), and the byte figures scale them by the per-row leaf
+        width, so the pool-wide optimizer traffic is bounded by
+        ``size * working_bytes`` regardless of total map size."""
+        cfg = self.meta.cfg
+        storage_rows = cfg.capacity
+        paged = getattr(cfg, "paged", None)
+        working_rows = (paged.visible_pages * paged.page_capacity
+                        if paged is not None else storage_rows)
+        # Bytes per Gaussian row: stacked g leaves are (S, N, ...), so the
+        # trailing dims x itemsize of each leaf is its per-row width.
+        row_bytes = sum(int(np.prod(leaf.shape[2:], dtype=np.int64))
+                        * leaf.dtype.itemsize
+                        for leaf in jax.tree.leaves(self._stacked.g))
+        return {
+            "rows": self.size,
+            "storage_rows": storage_rows,
+            "working_rows": working_rows,
+            "working_fraction": working_rows / storage_rows,
+            "storage_bytes_per_row": storage_rows * row_bytes,
+            "working_bytes_per_row": working_rows * row_bytes,
+            "paged": paged is not None,
+        }
+
 
 # ---------------------------------------------------------------------------
 # the host-side frame pipeline

@@ -57,7 +57,12 @@ from repro.core.losses import psnr as psnr_dev
 from repro.core.raster_api import static_fingerprint
 from repro.core.render import render
 from repro.core.schedule import build_schedule
-from repro.core.sorting import FragmentLists, stack_fragment_lists, update_fragment_slot
+from repro.core.sorting import (
+    FragmentLists,
+    remap_fragment_rows,
+    stack_fragment_lists,
+    update_fragment_slot,
+)
 from repro.slam import geometric
 from repro.slam.datasets import SLAMDataset
 from repro.slam.engine import (
@@ -79,6 +84,8 @@ from repro.slam.metrics import (
     wide_work_zero,
 )
 from repro.obs import Stopwatch, telemetry_or_off
+from repro.slam.map import paged as pagedmap
+from repro.train import optimizer as optim
 from repro.train.optimizer import Adam, AdamState
 
 
@@ -121,6 +128,13 @@ class SLAMConfig:
                                     # loop bodies ~30% slower; unrolling
                                     # trades compile time for straight-line
                                     # code while keeping ONE dispatch)
+    paged: Optional[pagedmap.PagedConfig] = None
+                                    # PagedMap: spatially-bucketed storage +
+                                    # frustum-culled working-set views so
+                                    # per-frame fragment/schedule cost tracks
+                                    # the VISIBLE map, not the whole pool
+                                    # (requires fused=True; None is the flat
+                                    # bitwise oracle)
 
 
 @dataclasses.dataclass
@@ -261,12 +275,17 @@ class SlamSession:
                                        # switches (empty unless prune +
                                        # downsample; keys fixed at init so
                                        # the treedef never changes)
+    page: Optional[pagedmap.PageTable] = None
+                                       # PagedMap spatial index over g's rows
+                                       # (None when cfg.paged is None); in
+                                       # paged mode map_opt's row leaves are
+                                       # VIEW-shaped (M = V*C rows)
 
     _DYN = ("g", "map_opt", "pstate", "masked", "pose", "velocity", "traj",
             "frame_idx", "kf_rgb", "kf_depth", "kf_w2c", "kf_count",
             "kf_total", "last_kf_idx", "last_kf_rgb", "prev_rgb",
             "prev_depth", "kf_psnr", "alive_log", "work", "frags", "sched",
-            "rng", "tile_baselines")
+            "rng", "tile_baselines", "page")
 
     def tree_flatten(self):
         return tuple(getattr(self, f) for f in self._DYN), self.meta
@@ -357,13 +376,20 @@ def _as_obs(frame) -> Observation:
 
 
 def _densify_core(g: G.GaussianField, rgb, depth, rendered, w2c,
-                  intr: Intrinsics, cfg: SLAMConfig, key) -> G.GaussianField:
+                  intr: Intrinsics, cfg: SLAMConfig, key):
     """Add Gaussians where the current render misses observed geometry.
 
     Same selection rule as the legacy host densifier (error-ranked top-2P,
     random P of those, backproject), expressed in jnp so it can ride inside
     the fused step dispatch.  The randomness comes from the session's
-    carried PRNG key (folded with the frame index), not host NumPy."""
+    carried PRNG key (folded with the frame index), not host NumPy.
+
+    Returns ``(g, dropped)``: ``G.insert`` fills dead slots lowest-index
+    first and silently discards newcomers once none remain, so ``dropped``
+    (the () i32 shortfall) surfaces that admission failure through
+    ``DeviceWork.densify_dropped``.  In paged mode ``g`` is the working-set
+    view whose nursery pages supply the dead rows — page spill drives this
+    to zero where a same-capacity flat pool overflows."""
     per = cfg.densify_per_kf
     err = jnp.abs(rendered - rgb).mean(-1)               # (H, W)
     score = jnp.where(depth > 1e-3, err, 0.0).reshape(-1)
@@ -391,7 +417,10 @@ def _densify_core(g: G.GaussianField, rgb, depth, rendered, w2c,
         color=inv_sig.astype(jnp.float32),
         alive=ok,
     )
-    return G.insert(g, new, max_new=per)
+    n_new = jnp.sum(new.alive.astype(jnp.int32))
+    n_dead = jnp.sum((~g.alive).astype(jnp.int32))
+    dropped = jnp.maximum(jnp.minimum(n_new, per) - n_dead, 0)
+    return G.insert(g, new, max_new=per), dropped
 
 
 def _push_ring(buf: jnp.ndarray, row: jnp.ndarray, count) -> jnp.ndarray:
@@ -418,6 +447,7 @@ def _make_row_step(meta: SessionMeta, factor: int):
     st_t = get_stage(intr, cfg, factor)     # tracking stage (may be scaled)
     st_1 = get_stage(intr, cfg, 1)          # mapping/eval stage
     kp = cfg.keyframe
+    paged = cfg.paged
     geo_scan = (get_geo_scan(intr, cfg)[0]
                 if cfg.base_algo == "photoslam" else None)
 
@@ -440,6 +470,34 @@ def _make_row_step(meta: SessionMeta, factor: int):
             pre_kf = jnp.asarray(False)
 
         base = sess.velocity @ sess.pose
+
+        # -- PagedMap working-set gather (inside this same dispatch) -------
+        # Pages visible from the predicted camera or ANY keyframe-ring pose
+        # (mapping renders the whole ring) form the frame's working set; a
+        # page outside every frustum contributes zero fragments and zero
+        # grads (projection culls its rows), so running the step on the
+        # gathered view is exact up to the static visible_pages cap.  When
+        # every page is selected the gather is the ascending identity and
+        # the step is bitwise-equal to the flat path.
+        page = sess.page
+        view_idx = None
+        if paged is not None:
+            cams = jnp.concatenate([base[None], sess.kf_w2c], axis=0)
+            vis = pagedmap.pages_visible(page, intr, cams,
+                                         margin=paged.margin)
+            selected = pagedmap.select_pages(
+                vis, page.occupancy, paged.visible_pages,
+                priority=pagedmap.page_distances(page, base))
+            view_idx = pagedmap.view_rows(page.row2page, selected,
+                                          paged.page_capacity)
+            g_store, pstate_store = g, pstate
+            g = pagedmap.gather_field(g, view_idx)
+            if pstate is not None:
+                pstate = pruning.gather_rows(pstate, view_idx)
+                masked = pstate.masked
+            else:
+                masked = masked[view_idx]
+
         obs_rgb = downsample_image(rgb, factor)
         obs_depth = downsample_depth(depth, factor)
         work0 = device_work_zero()
@@ -458,7 +516,8 @@ def _make_row_step(meta: SessionMeta, factor: int):
                 gaussians_iters=zero,
                 iterations=jnp.asarray(k_track, jnp.int32),
                 unstable_gaussians=zero, sched_programs=zero,
-                skipped_fragments=zero)
+                skipped_fragments=zero, densify_dropped=zero,
+                frag_build_rows=zero)
             track_losses = jnp.zeros((k_track,), jnp.float32)
             fired = jnp.zeros((k_track,), bool)
         else:
@@ -505,8 +564,8 @@ def _make_row_step(meta: SessionMeta, factor: int):
             # Eval render at the tracked pose drives densification.
             out = render(silence(g, masked), Camera(intr, new_pose),
                          st_1.plan)
-            g2 = _densify_core(g, rgb, depth, out.image, new_pose, intr, cfg,
-                               key)
+            g2, dropped = _densify_core(g, rgb, depth, out.image, new_pose,
+                                        intr, cfg, key)
             stable = None
             if sparse:
                 # Newcomers land in previously-dead slots whose stale
@@ -523,13 +582,23 @@ def _make_row_step(meta: SessionMeta, factor: int):
             g, map_opt, work_m, map_losses, image = st_1._map_scan_masked(
                 g, masked, opt0, kf_w2c, kf_rgb, kf_depth, kf_valid, work0,
                 stable)
+            # The densify-eval render above and the serving-cache refresh
+            # below each build one fragment list over g's rows.
+            work_m = work_m._replace(
+                densify_dropped=work_m.densify_dropped + dropped,
+                frag_build_rows=work_m.frag_build_rows
+                + jnp.asarray(2 * g.mu.shape[0], jnp.int32))
             psnr_v = psnr_dev(image, rgb)
             kf_psnr_buf = kf_psnr_buf.at[kf_total].set(psnr_v)
             # Refresh the cached stage-1 fragment lists (+ WSU schedule) of
             # the current map at the new keyframe pose — the session's
             # serving cache for external renders (always dense: external
-            # renders see the whole map).
+            # renders see the whole map).  In paged mode the build runs over
+            # the working-set view; the cached indices are remapped to
+            # storage rows so external consumers render against sess.g.
             frags_l = st_1._build_core(g, masked, new_pose)
+            if paged is not None:
+                frags_l = remap_fragment_rows(frags_l, view_idx)
             sched_l = (build_schedule(frags_l.count, st_1.plan.chunk,
                                       bucket=cfg.sched_bucket,
                                       max_trips=st_1.plan.max_trips)
@@ -566,6 +635,22 @@ def _make_row_step(meta: SessionMeta, factor: int):
         (g, map_opt, kf_rgb, kf_depth, kf_w2c, kf_count, kf_total,
          kf_psnr_buf, frags_l, sched_l, work_m, map_losses, psnr_v) = cond_out
 
+        # -- PagedMap scatter-back + keyframe page-table rebuild -----------
+        if paged is not None:
+            g = pagedmap.scatter_field(g_store, g, view_idx)
+            if pstate is not None:
+                pstate = pruning.scatter_rows(pstate_store, pstate, view_idx)
+            # Rebuild the spatial index on keyframes (the only step that
+            # admits rows): densified newcomers migrate from nursery pages
+            # to their Morton bucket and dead rows re-collect page-locally.
+            # Between keyframes the stale table is conservative — pruning
+            # removals only shrink true AABBs/occupancy, never grow them.
+            page = jax.lax.cond(
+                is_kf,
+                lambda gg: pagedmap.build_page_table(gg, paged),
+                lambda gg: page,
+                g)
+
         alive_now = g.num_alive()
         step_work = device_work_merge(work_t, work_m)
         new_sess = sess.replace(
@@ -579,7 +664,7 @@ def _make_row_step(meta: SessionMeta, factor: int):
             kf_psnr=kf_psnr_buf,
             alive_log=sess.alive_log.at[idx].set(alive_now),
             work=wide_work_add(sess.work, step_work),
-            frags=frags_l, sched=sched_l,
+            frags=frags_l, sched=sched_l, page=page,
         )
         result = StepResult(pose=new_pose, is_kf=is_kf, psnr=psnr_v,
                             alive=alive_now, work=step_work,
@@ -641,6 +726,12 @@ def session_init(dataset: SLAMDataset, cfg: SLAMConfig, *,
         assert intr.height % 64 == 0 and intr.width % 64 == 0, (
             "dynamic downsampling needs 64-divisible frames (16px tiles at "
             f"the 4x stage); got {intr.height}x{intr.width}")
+    if cfg.paged is not None:
+        if not cfg.fused:
+            raise ValueError("SLAMConfig.paged requires cfg.fused=True: the "
+                             "frustum cull + working-set gather ride inside "
+                             "the fused step dispatch")
+        pagedmap.validate_paged(cfg.paged, cfg.capacity)
     meta = SessionMeta(cfg, intr)
     st_1 = get_stage(intr, cfg, 1)
     f0 = dataset.frames[0]
@@ -676,6 +767,23 @@ def session_init(dataset: SLAMDataset, cfg: SLAMConfig, *,
         g, masked if pstate is None else pstate.masked, map_opt0,
         kf_w2c, kf_rgb, kf_depth, kf_valid)
 
+    # PagedMap: the bootstrap mapped the full pool (frame 0 sees the whole
+    # seed map); build the initial spatial index and park the Adam moments
+    # at the frame-0 working-set view shape — every subsequent keyframe
+    # re-inits them anyway, so only the (M, ...) row shape is load-bearing.
+    page = None
+    if cfg.paged is not None:
+        pc = cfg.paged
+        page = pagedmap.build_page_table(g, pc)
+        cams = jnp.concatenate([pose0[None], kf_w2c], axis=0)
+        vis = pagedmap.pages_visible(page, intr, cams, margin=pc.margin)
+        selected = pagedmap.select_pages(
+            vis, page.occupancy, pc.visible_pages,
+            priority=pagedmap.page_distances(page, pose0))
+        view_idx = pagedmap.view_rows(page.row2page, selected,
+                                      pc.page_capacity)
+        map_opt = optim.gather_rows(map_opt, view_idx)
+
     return SlamSession(
         meta=meta, g=g, map_opt=map_opt, pstate=pstate, masked=masked,
         pose=pose0, velocity=jnp.eye(4, dtype=jnp.float32),
@@ -690,6 +798,7 @@ def session_init(dataset: SLAMDataset, cfg: SLAMConfig, *,
         work=work_m, frags=frags_l, sched=sched_l,
         rng=jax.random.PRNGKey(seed),
         tile_baselines=tile_baselines,
+        page=page,
     )
 
 
@@ -703,6 +812,10 @@ def _boot_fn(meta: SessionMeta):
             g, opt, work_m, _, image = st_1._map_scan_masked(
                 g, masked, map_opt0, kf_w2c, kf_rgb, kf_depth, kf_valid,
                 device_work_zero())
+            # The serving-cache build below sweeps the pool once more.
+            work_m = work_m._replace(
+                frag_build_rows=work_m.frag_build_rows
+                + jnp.asarray(g.mu.shape[0], jnp.int32))
             work_m = wide_work_add(wide_work_zero(), work_m)
             psnr0 = psnr_dev(image, kf_rgb[0])
             frags_l = st_1._build_core(g, masked, kf_w2c[0])
@@ -1011,7 +1124,8 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
     if is_kf:
         rendered = eng.render_eval(g, masked, new_pose)
         key = jax.random.fold_in(sess.rng, idx)
-        g2 = _densify_jit(meta)(g, rgb, depth, rendered, new_pose, key)
+        g2, dropped = _densify_jit(meta)(g, rgb, depth, rendered, new_pose,
+                                         key)
         stats.dispatches += 1
         stable = None
         if getattr(cfg, "sparse_opt", False):
@@ -1085,9 +1199,16 @@ def _step_unfused(sess: SlamSession, obs: Observation, factor: int,
                 stats.syncs += 2
                 stacked = update_fragment_slot(
                     stacked, jnp.asarray(slot, jnp.int32), fresh)
+        # Mirror the fused accounting bitwise: n2 window builds + the static
+        # stride rebuilds + 3 single-list sweeps (densify-eval render, final
+        # eval render, serving-cache refresh), each over the full pool.
         work_m = DeviceWork(fragments=fr, pixels=px, gaussians_iters=gi,
                             iterations=it_n, unstable_gaussians=un,
-                            sched_programs=pr, skipped_fragments=sk_n)
+                            sched_programs=pr, skipped_fragments=sk_n,
+                            densify_dropped=dropped,
+                            frag_build_rows=(n2 + cfg.iters_map
+                                             // cfg.map_rebuild_stride + 3)
+                            * cfg.capacity)
         map_losses = jnp.stack(losses)
         image = eng.render_eval(g, masked, kf_w2c[n2 - 1])
         psnr_v = psnr_dev(image, rgb)

@@ -97,6 +97,26 @@ class Adam:
         )
 
 
+def gather_rows(state: AdamState, idx: jnp.ndarray) -> AdamState:
+    """Row-gather an Adam state whose moment leaves are (N, ...)-shaped onto
+    a paged view: ``idx`` is the (M,) storage-row index per view row.  The
+    shared () step counter passes through (bias correction is global)."""
+    take = lambda leaf: leaf[idx]
+    return AdamState(step=state.step,
+                     mu=jax.tree.map(take, state.mu),
+                     nu=jax.tree.map(take, state.nu))
+
+
+def scatter_rows(full: AdamState, view: AdamState,
+                 idx: jnp.ndarray) -> AdamState:
+    """Scatter a paged view's moment rows back into full storage; the step
+    counter comes from the view (that is where updates ran)."""
+    put = lambda f, v: f.at[idx].set(v)
+    return AdamState(step=view.step,
+                     mu=jax.tree.map(put, full.mu, view.mu),
+                     nu=jax.tree.map(put, full.nu, view.nu))
+
+
 class SGDState(NamedTuple):
     step: jnp.ndarray
     momentum: Any

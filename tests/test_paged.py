@@ -1,0 +1,328 @@
+"""PagedMap acceptance tests.
+
+(a) unit invariants of the page overlay: fixed-size pages, dead rows in the
+    trailing nursery, empty pages culled, identity selection/gather when
+    every page is visible;
+(b) the paged session with ALL pages visible is **bitwise-equal** to the
+    flat session — params, poses, AND the full work-counter tuple — with
+    pruning and densification on;
+(c) admission accounting: a flat pool with no dead slots left reports the
+    densify shortfall in ``DeviceWork.densify_dropped`` (and the host
+    ``WorkCounters``); the paged path keeps nursery pages in every working
+    set, so the same insertion pressure drops nothing (page spill);
+(d) a working set smaller than the map still prunes/densifies correctly
+    across page boundaries (alive accounting stays exact on full storage);
+(e) paged sessions serve: ``SessionPool`` rows stay bitwise-equal to solo
+    paged runs at exactly 1.0 dispatches per frame-step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gaussians as G
+from repro.core.camera import Intrinsics, look_at
+from repro.core.keyframes import KeyframePolicy
+from repro.core.pruning import PruneConfig
+from repro.slam import session as S
+from repro.slam.datasets import make_dataset
+from repro.slam.engine import EngineStats
+from repro.slam.map import (
+    PAGE_LADDER,
+    PagedConfig,
+    build_page_table,
+    ladder_page_capacity,
+    page_distances,
+    pages_visible,
+    select_pages,
+    view_rows,
+)
+
+
+def _cfg(**kw):
+    base = dict(iters_track=3, iters_map=4, capacity=1024, frag_capacity=48,
+                map_window=2, map_rebuild_stride=2, scan_unroll=1,
+                densify_per_kf=64,
+                keyframe=KeyframePolicy(kind="monogs", interval=2),
+                prune=PruneConfig(k0=2, step_frac=0.1))
+    base.update(kw)
+    return S.SLAMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def scene():
+    return make_dataset("room0", num_frames=5, height=48, width=64,
+                        num_gaussians=400, frag_capacity=48)
+
+
+def _work_all(w):
+    return tuple(int(x) for x in w)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(jax.device_get(x)),
+                              np.asarray(jax.device_get(y)))
+               for x, y in zip(la, lb))
+
+
+def _field(mu, alive):
+    n = mu.shape[0]
+    return G.GaussianField(
+        mu=jnp.asarray(mu, jnp.float32),
+        log_scale=jnp.zeros((n, 3), jnp.float32),
+        quat=jnp.tile(jnp.array([1.0, 0.0, 0.0, 0.0], jnp.float32), (n, 1)),
+        logit_o=jnp.zeros((n,), jnp.float32),
+        color=jnp.zeros((n, 3), jnp.float32),
+        alive=jnp.asarray(alive, bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# (a) page-overlay unit invariants
+# ---------------------------------------------------------------------------
+
+def test_page_table_fixed_pages_and_nursery():
+    rng = np.random.default_rng(0)
+    n, c = 256, 32
+    mu = rng.uniform(-4.0, 4.0, (n, 3)).astype(np.float32)
+    alive = np.zeros((n,), bool)
+    alive[: n // 2] = True
+    rng.shuffle(alive)
+    table = build_page_table(_field(mu, alive), PagedConfig(page_capacity=c))
+    r2p = np.asarray(table.row2page)
+    p = n // c
+    # Every page owns exactly C rows.
+    assert np.array_equal(np.bincount(r2p, minlength=p),
+                          np.full((p,), c))
+    # Occupancy sums to the alive count and matches per-page membership.
+    occ = np.asarray(table.occupancy)
+    assert occ.sum() == alive.sum()
+    for pg in range(p):
+        assert occ[pg] == alive[r2p == pg].sum()
+    # Dead rows sort behind every alive row: alive pages form a prefix.
+    nonempty = np.nonzero(occ)[0]
+    assert occ[: len(nonempty)].min() > 0
+    # AABBs bound their alive members.
+    lo, hi = np.asarray(table.lo), np.asarray(table.hi)
+    for pg in nonempty:
+        m = alive & (r2p == pg)
+        assert (mu[m] >= lo[pg] - 1e-6).all()
+        assert (mu[m] <= hi[pg] + 1e-6).all()
+
+
+def test_empty_page_is_never_visible():
+    n, c = 128, 32
+    mu = np.zeros((n, 3), np.float32)
+    mu[:, 2] = 3.0                        # everything straight ahead
+    alive = np.zeros((n,), bool)
+    alive[:c] = True                      # exactly one alive page
+    table = build_page_table(_field(mu, alive), PagedConfig(page_capacity=c))
+    intr = Intrinsics(fx=60.0, fy=60.0, cx=32.0, cy=24.0, width=64, height=48)
+    w2c = jnp.eye(4)[None]
+    vis = np.asarray(pages_visible(table, intr, w2c))
+    occ = np.asarray(table.occupancy)
+    assert vis[occ > 0].all()             # the alive page IS seen
+    assert not vis[occ == 0].any()        # nursery pages never are
+    # A camera looking away sees nothing at all.
+    away = look_at(jnp.zeros(3), jnp.array([0.0, 0.0, -5.0]),
+                   jnp.array([0.0, -1.0, 0.0]))
+    assert not np.asarray(pages_visible(table, intr, away[None])).any()
+
+
+def test_select_all_visible_is_identity_gather():
+    p, c = 8, 32
+    visible = jnp.ones((p,), bool)
+    occ = jnp.full((p,), c, jnp.int32)
+    sel = select_pages(visible, occ, v_max=p)
+    assert np.array_equal(np.asarray(sel), np.arange(p))
+    rows = view_rows(jnp.repeat(jnp.arange(p, dtype=jnp.int32), c), sel, c)
+    assert np.array_equal(np.asarray(rows), np.arange(p * c))
+
+
+def test_select_fills_quota_with_emptiest_nursery_pages():
+    occ = jnp.asarray([32, 32, 5, 0, 17, 0], jnp.int32)
+    visible = jnp.asarray([True, False, False, False, False, False])
+    sel = np.asarray(select_pages(visible, occ, v_max=3))
+    # Visible page 0 first, then the two emptiest non-visible pages (3, 5),
+    # re-sorted ascending.
+    assert np.array_equal(sel, [0, 3, 5])
+
+
+def test_select_overflow_drops_farthest_visible_pages():
+    """When more pages are visible than the quota, the distance priority
+    keeps the near field: far pages (vanishing-point contributions) are
+    the ones dropped — and with every page visible AND selected the
+    result is still the ascending identity regardless of priority."""
+    occ = jnp.full((4,), 8, jnp.int32)
+    visible = jnp.ones((4,), bool)
+    dist = jnp.asarray([9.0, 1.0, 4.0, 0.0])
+    sel = np.asarray(select_pages(visible, occ, v_max=2, priority=dist))
+    assert np.array_equal(sel, [1, 3])          # nearest two, re-sorted
+    sel_all = np.asarray(select_pages(visible, occ, v_max=4, priority=dist))
+    assert np.array_equal(sel_all, np.arange(4))
+
+
+def test_page_distances_zero_inside_box_inf_when_empty():
+    n, c = 64, 32
+    mu = np.zeros((n, 3), np.float32)
+    mu[:c, 2] = np.linspace(2.0, 4.0, c)        # one alive page ahead
+    alive = np.zeros((n,), bool)
+    alive[:c] = True
+    table = build_page_table(_field(mu, alive), PagedConfig(page_capacity=c))
+    d = np.asarray(page_distances(table, jnp.eye(4)))   # eye at origin
+    occ = np.asarray(table.occupancy)
+    assert np.isfinite(d[occ > 0]).all()
+    assert (d[occ > 0] > 0).all()
+    assert np.isinf(d[occ == 0]).all()
+    # A camera inside the page's AABB is distance zero.
+    inside = look_at(jnp.array([0.0, 0.0, 3.0]), jnp.array([0.0, 0.0, 5.0]),
+                     jnp.array([0.0, -1.0, 0.0]))
+    d_in = np.asarray(page_distances(table, inside))
+    assert d_in[occ > 0].min() == 0.0
+
+
+def test_ladder_and_validation():
+    assert ladder_page_capacity(1024) == 256          # >= 4 pages
+    assert ladder_page_capacity(4096) == 1024
+    assert ladder_page_capacity(128, min_pages=4) == 32
+    for bad in (
+        dict(paged=PagedConfig(page_capacity=48)),            # off-ladder
+        dict(paged=PagedConfig(page_capacity=128,
+                               visible_pages=99)),            # > P
+        dict(capacity=1000,
+             paged=PagedConfig(page_capacity=128)),           # indivisible
+        dict(fused=False,
+             paged=PagedConfig(page_capacity=128)),           # needs fused
+    ):
+        with pytest.raises(ValueError):
+            scene = make_dataset("room0", num_frames=2, height=48, width=64,
+                                 num_gaussians=64)
+            S.session_init(scene, _cfg(**bad))
+    assert all(c in PAGE_LADDER for c in (32, 1024))
+
+
+# ---------------------------------------------------------------------------
+# (b) all-pages-visible == flat, bitwise (the oracle anchor)
+# ---------------------------------------------------------------------------
+
+def _replay(scene, cfg):
+    stats = EngineStats()
+    sess = S.session_init(scene, cfg, stats=stats)
+    results = []
+    for f in scene.frames[1:]:
+        sess, r = S.session_step(sess, f, stats=stats)
+        results.append(jax.device_get(r))
+    fin = S.session_finalize(sess, gt_w2c=[f.w2c_gt for f in scene.frames],
+                             stats=stats)
+    return sess, results, fin
+
+
+def test_paged_all_visible_bitwise_equals_flat(scene):
+    """capacity 1024 / page 128 / visible 8: every page is always selected,
+    the gather is the ascending identity, and EVERYTHING the step produces
+    — Gaussian params, poses, PSNR, the full 9-field work tuple — must be
+    bit-identical to the flat session, with pruning + densify live."""
+    sf, rf, ff = _replay(scene, _cfg())
+    sp, rp, fp = _replay(scene, _cfg(
+        paged=PagedConfig(page_capacity=128, visible_pages=8)))
+    assert sp.page is not None and sf.page is None
+    assert _leaves_equal(G.params_of(sf.g), G.params_of(sp.g))
+    assert np.array_equal(np.asarray(sf.g.alive), np.asarray(sp.g.alive))
+    for a, b in zip(rf, rp):
+        assert np.array_equal(np.asarray(a.pose), np.asarray(b.pose))
+        assert _work_all(a.work) == _work_all(b.work)
+        assert bool(a.is_kf) == bool(b.is_kf)
+    assert ff.keyframe_psnr == fp.keyframe_psnr
+    assert ff.alive_per_frame == fp.alive_per_frame
+    assert ff.work.frag_build_rows == fp.work.frag_build_rows
+    assert ff.work.densify_dropped == fp.work.densify_dropped
+    assert np.array_equal(np.stack(ff.est_w2c), np.stack(fp.est_w2c))
+
+
+# ---------------------------------------------------------------------------
+# (c) densify overflow accounting: flat drops, paged spills
+# ---------------------------------------------------------------------------
+
+def test_flat_densify_overflow_is_counted(scene):
+    """A 256-row pool seeds 128 alive; pushing 256 newcomers per keyframe
+    exhausts the dead slots, and the shortfall must surface in the step's
+    ``densify_dropped`` and the finalized ``WorkCounters``."""
+    _, results, fin = _replay(scene, _cfg(capacity=256, densify_per_kf=256,
+                                          prune=None))
+    dropped = [int(r.work.densify_dropped) for r in results]
+    assert any(d > 0 for d in dropped)
+    assert fin.work.densify_dropped == sum(dropped)
+    assert fin.work.densify_dropped > 0
+
+
+def test_paged_nursery_spill_absorbs_densify(scene):
+    """With a working set SMALLER than the map (6 of 8 pages), the visible
+    pages are fully alive after seeding — insertion headroom exists only
+    because select_pages tops the quota up with nursery pages.  The same
+    densify pressure must drop nothing and the map must actually grow."""
+    stats = EngineStats()
+    sess = S.session_init(scene, _cfg(
+        paged=PagedConfig(page_capacity=128, visible_pages=6)), stats=stats)
+    alive0 = int(jax.device_get(sess.g.num_alive()))
+    saw_kf = False
+    for f in scene.frames[1:]:
+        sess, r = S.session_step(sess, f, stats=stats)
+        assert int(jax.device_get(r.work.densify_dropped)) == 0
+        saw_kf = saw_kf or bool(jax.device_get(r.is_kf))
+    assert saw_kf
+    assert int(jax.device_get(sess.g.num_alive())) > alive0
+
+
+# ---------------------------------------------------------------------------
+# (d) pruning across page boundaries on a partial working set
+# ---------------------------------------------------------------------------
+
+def test_paged_partial_view_prunes_across_pages(scene):
+    """Aggressive pruning on a 6-of-8-page working set: removals hit rows
+    scattered over multiple pages; after scatter-back the full-storage
+    alive count must equal the per-page occupancy total of the rebuilt
+    table, and the removal counter must actually move."""
+    sess = S.session_init(scene, _cfg(
+        prune=PruneConfig(k0=2, step_frac=0.3),
+        paged=PagedConfig(page_capacity=128, visible_pages=6)))
+    for f in scene.frames[1:]:
+        sess, r = S.session_step(sess, f)
+    removed = int(jax.device_get(sess.pstate.removed))
+    assert removed > 0
+    alive = int(jax.device_get(sess.g.num_alive()))
+    table = build_page_table(sess.g, sess.meta.cfg.paged)
+    assert int(np.asarray(table.occupancy).sum()) == alive
+    # The carried table was rebuilt on the last keyframe; its occupancy can
+    # only over-count (tracking prune between keyframes), never under-count.
+    assert int(np.asarray(sess.page.occupancy).sum()) >= alive
+
+
+# ---------------------------------------------------------------------------
+# (e) paged sessions serve: pool rows bitwise, 1.0 dispatches/frame-step
+# ---------------------------------------------------------------------------
+
+def test_paged_pool_rows_bitwise_and_one_dispatch(scene):
+    cfg = _cfg(paged=PagedConfig(page_capacity=128, visible_pages=8))
+    scene_b = make_dataset("room1", num_frames=5, height=48, width=64,
+                           num_gaussians=400, frag_capacity=48)
+    solo_a = S.session_init(scene, cfg)
+    solo_b = S.session_init(scene_b, cfg)
+    pool = S.SessionPool([S.session_init(scene, cfg),
+                          S.session_init(scene_b, cfg)])
+    steps = 0
+    for fa, fb in zip(scene.frames[1:], scene_b.frames[1:]):
+        solo_a, _ = S.session_step(solo_a, fa)
+        solo_b, _ = S.session_step(solo_b, fb)
+        pool.step([fa, fb])
+        steps += 1
+    assert pool.stats.dispatches == steps        # exactly 1.0 per frame-step
+    for solo, slot in ((solo_a, 0), (solo_b, 1)):
+        row = pool.session(slot)
+        assert _leaves_equal(G.params_of(solo.g), G.params_of(row.g))
+        assert np.array_equal(np.asarray(jax.device_get(solo.pose)),
+                              np.asarray(jax.device_get(row.pose)))
+        assert _leaves_equal(solo.page, row.page)
+        assert _leaves_equal(solo.work, row.work)

@@ -291,4 +291,5 @@ def test_unknown_scene_error_lists_registered_scenes():
         make_dataset("atrium9", num_frames=2, height=48, width=64,
                      num_gaussians=64)
     for name in registered_scenes():
-        assert name in ("room0", "room1", "hall0", "desk0", "stairs0")
+        assert name in ("room0", "room1", "hall0", "desk0", "stairs0",
+                        "corridor0")
